@@ -1,0 +1,44 @@
+"""Fig. 1 analogue: characterization of every engine across all workers —
+QPS, preprocessing time, execution time (per 1000 queries)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engines import default_engines
+from repro.core.job import exec_time
+from repro.core.offline import characterize
+
+WORKERS = ["cloud-pod", "edge-large", "edge-small"]
+
+
+def run(cd=None, emit=print):
+    cd = cd or characterize()
+    rows = []
+    for e in default_engines():
+        for w in WORKERS:
+            ent = cd.optimal(e, w)
+            if ent is None:
+                continue
+            rows.append((e, w, ent.qps, ent.preproc_s,
+                         exec_time(ent, 1000), ent.mode,
+                         ent.chips_per_replica, ent.bottleneck))
+            emit(f"characterization,{e},{w},qps={ent.qps:.2f},"
+                 f"preproc_s={ent.preproc_s:.2f},"
+                 f"exec1000_s={exec_time(ent, 1000):.1f},"
+                 f"config={ent.mode}/r{ent.chips_per_replica},"
+                 f"bottleneck={ent.bottleneck}")
+    # headline: cloud vs edge ratios (paper: x86 is 2.8x/4.2x AGX/NX on QPS)
+    by_w = {w: [] for w in WORKERS}
+    for e in default_engines():
+        ents = {w: cd.optimal(e, w) for w in WORKERS}
+        if all(ents.values()):
+            for w in WORKERS:
+                by_w[w].append(ents[w].qps)
+    r_large = np.mean([a / b for a, b in zip(by_w["cloud-pod"],
+                                             by_w["edge-large"])])
+    r_small = np.mean([a / b for a, b in zip(by_w["cloud-pod"],
+                                             by_w["edge-small"])])
+    emit(f"characterization_headline,cloud_vs_edge_large={r_large:.2f}x,"
+         f"cloud_vs_edge_small={r_small:.2f}x,paper=2.8x/4.2x")
+    return rows

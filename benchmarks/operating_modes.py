@@ -1,0 +1,63 @@
+"""Fig. 3/4/5 + Table 2 analogue (Key Outcomes 3 & 4): operating-mode impact
+on the edge pools, and the per-factor (frequency / #chips / power) view."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engines import default_engines
+from repro.core.perfmodel import ConfigPoint, config_space, estimate
+from repro.core.workers import default_fleet
+
+
+def run(emit=print):
+    engines = default_engines()
+    rows = []
+    for pool in default_fleet():
+        if not pool.is_edge:
+            continue
+        per_mode = {}
+        by_freq = {}
+        by_chips = {}
+        by_power = {}
+        for mode in pool.modes:
+            qpss = []
+            for eng in engines.values():
+                best = 0.0
+                for pt in config_space(eng, pool):
+                    if pt.mode != mode:
+                        continue
+                    est = estimate(eng, pool, pt)
+                    if est.feasible:
+                        best = max(best, est.qps)
+                if best > 0:
+                    qpss.append(best)
+            if not qpss:
+                continue
+            per_mode[mode.name] = float(np.mean(qpss))
+            by_freq.setdefault(mode.clock_scale, []).extend(qpss)
+            by_chips.setdefault(mode.chips_online, []).extend(qpss)
+            by_power.setdefault(mode.power_budget_w, []).extend(qpss)
+            emit(f"operating_modes,{pool.name},{mode.name},"
+                 f"clock={mode.clock_scale:.2f},chips={mode.chips_online},"
+                 f"power_w={mode.power_budget_w:.0f},"
+                 f"avg_qps={per_mode[mode.name]:.2f}")
+        best_mode = max(per_mode, key=per_mode.get)
+        worst_mode = min(per_mode, key=per_mode.get)
+        emit(f"operating_modes_headline,{pool.name},best={best_mode},"
+             f"worst={worst_mode},"
+             f"spread={per_mode[best_mode] / per_mode[worst_mode]:.2f}x")
+        # KO4: frequency is the dominant factor
+        freqs = sorted(by_freq)
+        corr_f = np.corrcoef(
+            [f for f in freqs for _ in by_freq[f]],
+            [q for f in freqs for q in by_freq[f]])[0, 1]
+        chips = sorted(by_chips)
+        corr_c = np.corrcoef(
+            [c for c in chips for _ in by_chips[c]],
+            [q for c in chips for q in by_chips[c]])[0, 1]
+        emit(f"operating_modes_factors,{pool.name},"
+             f"freq_qps_corr={corr_f:.2f},chips_qps_corr={corr_c:.2f},"
+             f"paper=frequency dominates (KO4)")
+        rows.append((pool.name, per_mode, corr_f, corr_c))
+    return rows

@@ -1,0 +1,128 @@
+"""§Roofline: assemble the three-term roofline table from dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / link_bw   (bytes are per-device)
+
+HLO_FLOPs/bytes come from the loop-aware jaxpr counter (XLA cost_analysis
+counts while bodies once — recorded alongside for reference); collective
+bytes come from the loop-aware optimized-HLO parse.  Hardware: TPU v5e,
+197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import SHAPES, get_config
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+HBM_BYTES = 16 * 1024**3
+
+FIX_HINTS = {
+    "compute": ("compute-bound: reduce recompute (remat policy) or raise "
+                "arithmetic intensity (larger microbatch / fused kernels)"),
+    "memory": ("memory-bound: int8/fp8 weights or KV, fuse elementwise "
+               "chains, keep activations sequence-sharded"),
+    "collective": ("collective-bound: reshard to cut all-gathers (larger "
+                   "per-device blocks), overlap collectives with compute, "
+                   "or move the dominant axis off the slow link"),
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per row
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    flops = rec.get("jaxpr_flops_global", 0)
+    byts = rec.get("jaxpr_bytes_global", 0)
+    coll = sum(rec.get("collective_bytes_per_device", {}).values())
+    t_compute = flops / (chips * PEAK)
+    t_memory = byts / (chips * HBM)
+    t_coll = coll / LINK
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    t_model = mf / (chips * PEAK)
+    t_max = max(terms.values()) or 1e-30
+    mem = rec.get("memory", {})
+    fits = None
+    if mem.get("temp_bytes") is not None:
+        live = (mem["temp_bytes"] + (mem.get("argument_bytes") or 0)
+                + (mem.get("output_bytes") or 0)
+                - (mem.get("alias_bytes") or 0))
+        fits = live <= HBM_BYTES
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": t_model / t_max,
+        "fits_hbm": fits,
+        "live_bytes_per_device": (None if mem.get("temp_bytes") is None
+                                  else live),
+        "hint": FIX_HINTS[dom],
+    }
+
+
+def run(art_dir="artifacts/dryrun", emit=print, mesh="single", tag=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec["status"] != "ok" or rec["mesh"] != mesh:
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        row = analyze_record(rec)
+        rows.append(row)
+        emit(f"roofline,{row['arch']},{row['shape']},{row['mesh']},"
+             f"compute_s={row['t_compute_s']:.4g},"
+             f"memory_s={row['t_memory_s']:.4g},"
+             f"coll_s={row['t_collective_s']:.4g},"
+             f"bottleneck={row['bottleneck']},"
+             f"useful={row['useful_flops_ratio']:.2f},"
+             f"roofline_frac={row['roofline_fraction']:.3f}")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        collbound = max(rows, key=lambda r: (r["t_collective_s"]
+                                             / (max(r["t_compute_s"],
+                                                    r["t_memory_s"]) + 1e-30)))
+        emit(f"roofline_summary,worst_fraction={worst['arch']}/"
+             f"{worst['shape']}={worst['roofline_fraction']:.3f},"
+             f"most_collective_bound={collbound['arch']}/"
+             f"{collbound['shape']}")
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective "
+           "(s) | bottleneck | 6ND/HLO | roofline frac | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                 f"{r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} | "
+                 f"{r['t_collective_s']:.4g} | {r['bottleneck']} | "
+                 f"{r['useful_flops_ratio']:.2f} | "
+                 f"{r['roofline_fraction']:.3f} | "
+                 f"{'y' if r['fits_hbm'] else 'n'} |\n")
+    return hdr + body

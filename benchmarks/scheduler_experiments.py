@@ -1,0 +1,63 @@
+"""Fig. 7/8/9/10 analogues: the three experiments (DL-FL, DL-FH, DH-FH) for
+all policies + SLO-MAEL comparison, aggregated over seeds."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import (BestEffort, LeastRecentlyUsed,
+                                  MostRecentlyUsed, RoundRobin,
+                                  StrictRoundRobin)
+from repro.core.job import make_experiment
+from repro.core.metrics import summarize
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import Simulator
+from repro.core.slo_mael import SloMael
+
+POLICIES = [RoundRobin, StrictRoundRobin, LeastRecentlyUsed,
+            MostRecentlyUsed, BestEffort, SloMael, SynergAI]
+EXPERIMENTS = [("DL-FL", "DL", "FL"), ("DL-FH", "DL", "FH"),
+               ("DH-FH", "DH", "FH")]
+
+
+def run(cd=None, seeds=(1, 2, 3, 4, 5), emit=print):
+    cd = cd or characterize()
+    results = {}
+    for exp, d, f in EXPERIMENTS:
+        for P in POLICIES:
+            agg = {"violations": 0, "waiting": [], "e2e": [], "p99": [],
+                   "excess": [], "overhead": []}
+            for seed in seeds:
+                jobs = make_experiment(cd, d, f, seed=seed)
+                s = summarize(Simulator(cd, P(), seed=seed).run(jobs))
+                agg["violations"] += s["violations"]
+                agg["waiting"].append(s["waiting_avg_s"])
+                agg["e2e"].append(s["e2e_avg_s"])
+                agg["p99"].append(s["e2e_p99_s"])
+                agg["excess"].append(s["excess_avg_s"])
+                agg["overhead"].append(s["overhead_avg_s"])
+            results[(exp, P.name)] = agg
+            emit(f"scheduler,{exp},{P.name},"
+                 f"violations={agg['violations']},"
+                 f"wait_s={np.mean(agg['waiting']):.1f},"
+                 f"e2e_s={np.mean(agg['e2e']):.1f},"
+                 f"p99_s={np.mean(agg['p99']):.1f},"
+                 f"excess_s={np.mean(agg['excess']):.1f}")
+    # headlines vs the paper
+    v = lambda name: sum(results[(e, name)]["violations"]
+                         for e, _, _ in EXPERIMENTS)
+    base_names = ["RR", "SRR", "LRU", "MRU", "BE"]
+    v_syn, v_mael = v("SynergAI"), v("SLO-MAEL")
+    v_base = np.mean([v(n) for n in base_names])
+    e_syn = np.mean([np.mean(results[(e, "SynergAI")]["excess"])
+                     for e, _, _ in EXPERIMENTS])
+    e_base = np.mean([np.mean(results[(e, n)]["excess"])
+                      for e, _, _ in EXPERIMENTS for n in base_names])
+    emit(f"scheduler_headline,slomael_over_synergai="
+         f"{v_mael / max(1, v_syn):.2f}x,paper=2.4x")
+    emit(f"scheduler_headline,baselines_over_synergai="
+         f"{v_base / max(1, v_syn):.2f}x,paper=7.1x")
+    emit(f"scheduler_headline,excess_baselines_over_synergai="
+         f"{e_base / max(e_syn, 1e-9):.2f}x,paper=5.3x")
+    return results

@@ -1,0 +1,34 @@
+"""Fig. 2 analogue (Key Outcome 2): vertical scaling — QPS vs
+chips-per-replica on the cloud pod (the paper's thread-count sweep)."""
+
+from __future__ import annotations
+
+from repro.core.engines import default_engines
+from repro.core.perfmodel import ConfigPoint, estimate
+from repro.core.workers import default_fleet
+
+
+def run(emit=print):
+    cloud = default_fleet()[0]
+    mode = cloud.modes[0]
+    engines = default_engines()
+    rows = []
+    speedups = {}
+    for name, eng in engines.items():
+        base = None
+        for r in (1, 2, 4, 8, 16):
+            est = estimate(eng, cloud, ConfigPoint(mode, r))
+            if not est.feasible:
+                continue
+            base = base or est.qps
+            rows.append((name, r, est.qps))
+            speedups.setdefault(r, []).append(est.qps / base)
+            emit(f"vertical_scaling,{name},chips={r},qps={est.qps:.2f},"
+                 f"speedup={est.qps / base:.2f}x,bottleneck={est.bottleneck}")
+    import numpy as np
+    for r in sorted(speedups):
+        emit(f"vertical_scaling_avg,chips={r},"
+             f"speedup={np.mean(speedups[r]):.2f}x")
+    emit("vertical_scaling_headline,paper=1.6x/2.5x/3.8x/4.5x for 2/4/8/16 "
+         "threads with diminishing returns past 8")
+    return rows

@@ -1,0 +1,42 @@
+"""Reproduce the paper's §5 evaluation: SynergAI vs five baselines and
+SLO-MAEL across DL-FL / DL-FH / DH-FH (Figures 7-10).
+
+    PYTHONPATH=src python examples/scheduler_comparison.py
+"""
+
+import numpy as np
+
+from repro.core.baselines import (BestEffort, LeastRecentlyUsed,
+                                  MostRecentlyUsed, RoundRobin,
+                                  StrictRoundRobin)
+from repro.core.job import make_experiment
+from repro.core.metrics import summarize
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import Simulator
+from repro.core.slo_mael import SloMael
+
+cd = characterize()
+policies = [RoundRobin, StrictRoundRobin, LeastRecentlyUsed,
+            MostRecentlyUsed, BestEffort, SloMael, SynergAI]
+totals = {}
+for exp, (d, f) in [("DL-FL", ("DL", "FL")), ("DL-FH", ("DL", "FH")),
+                    ("DH-FH", ("DH", "FH"))]:
+    print(f"\n=== {exp} (24 jobs x 5 seeds) ===")
+    for P in policies:
+        v, wait, excess = 0, [], []
+        for seed in (1, 2, 3, 4, 5):
+            jobs = make_experiment(cd, d, f, seed=seed)
+            s = summarize(Simulator(cd, P(), seed=seed).run(jobs))
+            v += s["violations"]
+            wait.append(s["waiting_avg_s"])
+            excess.append(s["excess_avg_s"])
+        totals[P.name] = totals.get(P.name, 0) + v
+        print(f"  {P.name:9s} violations={v:3d}  wait={np.mean(wait):7.1f}s"
+              f"  excess={np.mean(excess):7.1f}s")
+
+syn = totals["SynergAI"]
+print(f"\nSLO-MAEL / SynergAI violations: {totals['SLO-MAEL'] / syn:.2f}x "
+      f"(paper: 2.4x)")
+base = np.mean([totals[n] for n in ["RR", "SRR", "LRU", "MRU", "BE"]])
+print(f"baselines / SynergAI violations: {base / syn:.2f}x (paper: 7.1x)")

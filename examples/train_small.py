@@ -1,0 +1,64 @@
+"""Train a small LM for a few hundred steps with checkpoint/restart —
+the fault-tolerance leg of the framework (kill it mid-run and re-launch:
+it resumes from the latest atomic checkpoint).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.models.registry import build_model
+from repro.training import checkpoint
+from repro.training.data import DataLoader
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_small")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("qwen3-4b"), n_layers=4, d_model=128, d_ff=512,
+                  n_heads=4, n_kv_heads=2, head_dim=32, vocab=512)
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+
+    start = 0
+    latest = checkpoint.latest_step(args.ckpt_dir)
+    if latest is not None:
+        import numpy as np
+        state = checkpoint.restore(args.ckpt_dir,
+                                   jax.tree.map(np.asarray, state))
+        start = latest
+        print(f"resumed from checkpoint at step {start}")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
+    dl = DataLoader(cfg.vocab, batch=16, seq=64, seed=start)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(dl).items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % 20 == 0:
+            print(f"step {step + 1:4d}  loss {float(metrics['loss']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"({(step + 1 - start) / (time.time() - t0):.1f} it/s)")
+        if (step + 1) % args.ckpt_every == 0:
+            path = checkpoint.save(args.ckpt_dir, step + 1, state)
+            print(f"checkpointed -> {path}")
+    dl.close()
+    print("done; final loss should be well below the ~6.2 random baseline")
+
+
+if __name__ == "__main__":
+    main()

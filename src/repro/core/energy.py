@@ -1,0 +1,38 @@
+"""Energy accounting (paper §5.4, Fig. 12).
+
+TDP-methodology: energy = operating-point power x busy time, accumulated in
+the simulator per worker pool.  Cloud (VM) energy is reported but flagged —
+the paper omits cloud energy because VM attribution is not feasible; we keep
+the same normalized-edge-energy headline plus the placement shares that
+explain SLO-MAEL's higher overall footprint.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+from repro.core.simulator import Cluster, JobResult
+
+
+def edge_energy(cluster: Cluster) -> Dict[str, float]:
+    return {n: w.energy_j for n, w in cluster.workers.items()
+            if w.pool.is_edge}
+
+
+def normalized_edge_energy(clusters: Dict[str, Cluster]
+                           ) -> Dict[str, Dict[str, float]]:
+    """Per-policy edge energy, normalized by the per-pool max across
+    policies (the paper's Fig. 12-left normalization)."""
+    pools = set()
+    for c in clusters.values():
+        pools |= set(edge_energy(c))
+    peak = {p: max(edge_energy(c).get(p, 0.0) for c in clusters.values())
+            or 1.0 for p in pools}
+    return {pol: {p: edge_energy(c).get(p, 0.0) / peak[p] for p in pools}
+            for pol, c in clusters.items()}
+
+
+def offload_fraction(results: Sequence[JobResult]) -> float:
+    """Fraction of jobs offloaded to the (non-edge) cloud."""
+    cloud = sum(1 for r in results if r.worker == "cloud-pod")
+    return cloud / max(1, len(results))

@@ -1,0 +1,78 @@
+"""Execution Time Estimator + QoS Violation Detection (paper Eq. 1-4),
+vectorized over the (jobs x workers) matrix.
+
+The numpy path is authoritative; ``repro.kernels.scheduler_score`` is the
+TPU Pallas version of the same scoring used at fleet scale (J, W large), and
+is validated against this module in the kernel tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.configdict import ConfigDict
+from repro.core.job import Job
+
+NEG = np.float64(np.inf)
+
+
+@dataclasses.dataclass
+class ScoreResult:
+    workers: List[str]
+    t_estimated: np.ndarray        # [J, W]  (inf where infeasible)
+    t_remaining: np.ndarray        # [J]
+    acceptable: np.ndarray         # [J, W] bool (Eq. 3)
+    best_worker: np.ndarray        # [J] int index into workers (Eq. 4; -1 none)
+    urgency: np.ndarray            # [J]  (lower == more urgent)
+    doomed: np.ndarray             # [J] bool — no acceptable worker
+
+
+def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
+                    now: float, use_default: bool = False) -> ScoreResult:
+    """Vectorized Eq. 1-4 over all queued jobs and all workers."""
+    J, W = len(jobs), len(workers)
+    t_est = np.full((J, W), np.inf)
+    for ji, job in enumerate(jobs):
+        for wi, w in enumerate(workers):
+            ent = (cd.default_entry(job.engine, w) if use_default
+                   else cd.optimal(job.engine, w))
+            if ent is None or ent.qps <= 0:
+                continue
+            t_est[ji, wi] = ent.preproc_s + job.queries / ent.qps  # Eq. 2
+    t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])  # Eq. 1
+    acceptable = t_rem[:, None] >= t_est                           # Eq. 3
+    # Eq. 4: argmin over acceptable workers; fall back to global argmin of
+    # feasible workers when nothing is acceptable (doomed jobs still run).
+    masked = np.where(acceptable, t_est, np.inf)
+    best = np.where(np.isfinite(masked).any(1), masked.argmin(1),
+                    np.where(np.isfinite(t_est).any(1), t_est.argmin(1), -1))
+    min_est = np.where(np.isfinite(t_est).any(1), np.nanmin(
+        np.where(np.isfinite(t_est), t_est, np.nan), axis=1), np.inf)
+    urgency = t_rem - min_est       # -> 0 means about to violate
+    doomed = ~acceptable.any(axis=1)
+    return ScoreResult(workers, t_est, t_rem, acceptable,
+                       best.astype(np.int64), urgency, doomed)
+
+
+def candidate_order(score: ScoreResult, ji: int,
+                    busy_wait: Optional[np.ndarray] = None) -> List[int]:
+    """Per-job worker candidates (paper: the sorted (w, c*) list).
+
+    Non-doomed jobs only consider their *acceptable* set — if none of those
+    workers are free the job waits rather than burning its QoS budget on a
+    worker that cannot meet it.  Doomed jobs (nothing acceptable) minimize
+    expected *completion*: candidates are ordered by (current busy wait +
+    T_estimated) so a doomed job waits for a fast worker instead of seizing
+    a far slower idle one and blocking it for everyone else.
+    """
+    t = score.t_estimated[ji]
+    if score.doomed[ji]:
+        cost = t + (busy_wait if busy_wait is not None else 0.0)
+        order = np.argsort(cost, kind="stable")
+        return [int(w) for w in order if np.isfinite(t[w])]
+    order = np.argsort(t, kind="stable")
+    feasible = [int(w) for w in order if np.isfinite(t[w])]
+    return [w for w in feasible if score.acceptable[ji, w]]

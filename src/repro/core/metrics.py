@@ -1,0 +1,45 @@
+"""Evaluation metrics (paper §5.1): violations, waiting, end-to-end,
+excess time, tail latency, scheduling overhead, energy, placement."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.simulator import Cluster, JobResult
+
+
+def summarize(results: Sequence[JobResult]) -> Dict[str, float]:
+    e2e = np.array([r.e2e for r in results])
+    waiting = np.array([r.waiting for r in results])
+    excess = np.array([r.excess for r in results])
+    overhead = np.array([r.overhead_s + r.decision_s for r in results])
+    violated = np.array([r.violated for r in results])
+    return {
+        "jobs": len(results),
+        "violations": int(violated.sum()),
+        "e2e_avg_s": float(e2e.mean()),
+        "e2e_min_s": float(e2e.min()),
+        "e2e_max_s": float(e2e.max()),
+        "e2e_p99_s": float(np.percentile(e2e, 99)),
+        "waiting_avg_s": float(waiting.mean()),
+        "excess_avg_s": float(excess[excess > 0].mean()
+                              if (excess > 0).any() else 0.0),
+        "overhead_avg_s": float(overhead.mean()),
+        "overhead_median_s": float(np.median(overhead)),
+        "overhead_max_s": float(overhead.max()),
+        "overhead_p99_s": float(np.percentile(overhead, 99)),
+    }
+
+
+def placement(results: Sequence[JobResult]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for r in results:
+        out[r.worker] = out.get(r.worker, 0) + 1
+    total = sum(out.values())
+    return {w: c / total for w, c in sorted(out.items())}
+
+
+def energy_by_pool(cluster: Cluster) -> Dict[str, float]:
+    return {name: ws.energy_j for name, ws in cluster.workers.items()}

@@ -1,0 +1,306 @@
+"""Discrete-event cluster simulator for scheduler evaluation (paper §5).
+
+Jobs run in strict isolation on their assigned worker (paper §5.1: "all jobs
+scheduled and executed in strict isolation ... zero interference").  The
+simulator also implements the fault-tolerance extensions (worker failure,
+straggler slowdown, elastic pool membership) used by the robustness tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.configdict import ConfigDict, Entry
+from repro.core.job import Job, exec_time
+from repro.core.workers import WorkerPool, default_fleet
+
+
+@dataclasses.dataclass
+class WorkerSim:
+    pool: WorkerPool
+    busy_until: float = 0.0
+    last_freed: float = 0.0
+    last_assigned: float = -math.inf
+    energy_j: float = 0.0
+    n_jobs: int = 0
+    busy_s: float = 0.0
+    failed_until: float = 0.0      # fault injection
+    slowdown: float = 1.0          # straggler injection
+
+    def idle(self, now: float) -> bool:
+        return self.busy_until <= now and self.failed_until <= now
+
+
+@dataclasses.dataclass
+class Assignment:
+    job: Job
+    worker: str
+    entry: Entry
+
+
+@dataclasses.dataclass
+class JobResult:
+    job: Job
+    worker: str
+    config: str
+    start: float
+    end: float
+    waiting: float
+    exec_s: float
+    e2e: float
+    violated: bool
+    excess: float
+    overhead_s: float
+    decision_s: float
+    speculated: bool = False
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    worker: str
+    at: float
+    duration: float
+
+
+class Cluster:
+    def __init__(self, cd: ConfigDict, fleet: Optional[Sequence[WorkerPool]]
+                 = None):
+        self.cd = cd
+        self.workers: Dict[str, WorkerSim] = {
+            w.name: WorkerSim(w) for w in (fleet or default_fleet())}
+
+    def idle_workers(self, now: float) -> List[str]:
+        return [n for n, w in self.workers.items() if w.idle(now)]
+
+    def feasible(self, engine: str, worker: str, use_default: bool) -> bool:
+        ent = (self.cd.default_entry(engine, worker) if use_default
+               else self.cd.optimal(engine, worker))
+        return ent is not None and ent.qps > 0
+
+
+class Policy:
+    """Interface: look at the queue, return assignments onto idle workers."""
+
+    name = "base"
+    use_default_config = True       # baselines use device defaults (paper)
+
+    def on_arrival(self, job: Job, cluster: Cluster, now: float):
+        pass
+
+    def schedule(self, now: float, queue: List[Job], cluster: Cluster
+                 ) -> List[Assignment]:
+        raise NotImplementedError
+
+
+class Simulator:
+    def __init__(self, cd: ConfigDict, policy: Policy,
+                 fleet: Optional[Sequence[WorkerPool]] = None,
+                 tick: float = 1.0,
+                 failures: Sequence[FailureEvent] = (),
+                 straggler_prob: float = 0.0,
+                 straggler_factor: float = 3.0,
+                 speculative: bool = False,
+                 exec_noise: float = 0.2,
+                 elastic_max: int = 0,
+                 elastic_threshold: int = 6,
+                 provision_s: float = 30.0,
+                 seed: int = 0):
+        self.cd = cd
+        self.policy = policy
+        self.cluster = Cluster(cd, fleet)
+        self.tick = tick
+        self.failures = sorted(failures, key=lambda f: f.at)
+        self.straggler_prob = straggler_prob
+        self.straggler_factor = straggler_factor
+        self.speculative = speculative
+        # run-to-run execution variance (real inference serving is noisy;
+        # schedulers only see profiled expectations).  Lognormal, mean 1.
+        self.exec_noise = exec_noise
+        # elastic scaling: clone the strongest pool under queue pressure
+        self.elastic_max = elastic_max
+        self.elastic_threshold = elastic_threshold
+        self.provision_s = provision_s
+        self._clones = 0
+        self.rng = np.random.default_rng(seed)
+
+    def run(self, jobs: Sequence[Job]) -> List[JobResult]:
+        pending = sorted(jobs, key=lambda j: j.arrival)
+        queue: List[Job] = []
+        results: List[JobResult] = []
+        running: Dict[int, JobResult] = {}
+        first_attempt: Dict[int, float] = {}
+        decision_time: Dict[int, float] = {}
+        failures = list(self.failures)
+        now = 0.0
+        n_total = len(pending)
+
+        def next_event() -> float:
+            cands = []
+            if pending:
+                cands.append(pending[0].arrival)
+            busy = [w.busy_until for w in self.cluster.workers.values()
+                    if w.busy_until > now]
+            cands += busy
+            fail = [f.at for f in failures if f.at > now]
+            cands += fail
+            recov = [w.failed_until for w in self.cluster.workers.values()
+                     if w.failed_until > now]
+            cands += recov
+            if queue and self.tick:
+                cands.append(now + self.tick)
+            if running and self.speculative and self.tick:
+                cands.append(now + self.tick)  # straggler watchdog
+            return min(cands) if cands else math.inf
+
+        guard = 0
+        while len(results) < n_total:
+            guard += 1
+            assert guard < 2_000_000, "simulator livelock"
+            # 1) deliver arrivals
+            while pending and pending[0].arrival <= now + 1e-12:
+                job = pending.pop(0)
+                queue.append(job)
+                self.policy.on_arrival(job, self.cluster, now)
+            # 2) worker failures: kill the running job, re-queue it
+            while failures and failures[0].at <= now + 1e-12:
+                f = failures.pop(0)
+                w = self.cluster.workers[f.worker]
+                w.failed_until = f.at + f.duration
+                for jid, rec in list(running.items()):
+                    if rec.worker == f.worker and rec.end > now:
+                        del running[jid]
+                        w.busy_until = now
+                        queue.append(rec.job)   # checkpoint-restart: requeue
+            # 3) complete finished jobs
+            for jid, rec in list(running.items()):
+                if rec.end <= now + 1e-12:
+                    del running[jid]
+                    results.append(rec)
+                    w = self.cluster.workers[rec.worker]
+                    w.last_freed = rec.end
+            # 3b) straggler mitigation: speculatively re-dispatch jobs that
+            # overshoot their estimate by 1.5x onto an idle faster worker;
+            # first finisher wins, the loser is cancelled.
+            if self.speculative:
+                self._speculate(now, running)
+            # 3c) elastic scaling: spin up a clone of the strongest pool
+            # when the queue backs up (provisioning delay applies); retire
+            # idle clones once pressure subsides.
+            if self.elastic_max:
+                if (len(queue) >= self.elastic_threshold
+                        and self._clones < self.elastic_max):
+                    self._clones += 1
+                    base = max(self.cluster.workers.values(),
+                               key=lambda w: w.pool.chip_flops
+                               * w.pool.n_chips).pool
+                    name = f"{base.name}__{self._clones + 1}"
+                    clone = WorkerSim(base)
+                    clone.busy_until = now + self.provision_s
+                    self.cluster.workers[name] = clone
+                elif not queue:
+                    for name in [n for n in self.cluster.workers
+                                 if "__" in n]:
+                        if self.cluster.workers[name].idle(now):
+                            del self.cluster.workers[name]
+                            self._clones -= 1
+            # 4) ask the policy for assignments
+            t0 = time.perf_counter()
+            assignments = self.policy.schedule(now, queue, self.cluster)
+            dt = time.perf_counter() - t0
+            for a in assignments:
+                decision_time[a.job.id] = (decision_time.get(a.job.id, 0.0)
+                                           + dt / max(1, len(assignments)))
+            # track blocked head-of-line attempts (scheduling overhead)
+            if not assignments and queue:
+                for j in queue[:1]:
+                    first_attempt.setdefault(j.id, now)
+            for a in assignments:
+                self._start(a, now, queue, running, first_attempt,
+                            decision_time)
+            # 5) advance time
+            nxt = next_event()
+            if nxt is math.inf and not running and queue:
+                # every queued job is infeasible everywhere -> drop loudly
+                raise RuntimeError(
+                    f"stuck: {[j.engine for j in queue]} infeasible")
+            if nxt is math.inf:
+                break
+            now = max(now, nxt)
+        return results
+
+    def _speculate(self, now: float, running: Dict[int, "JobResult"]):
+        use_default = self.policy.use_default_config
+        for jid, rec in list(running.items()):
+            if rec.speculated or rec.end <= now:
+                continue
+            ent = (self.cd.default_entry(rec.job.engine, rec.worker)
+                   if use_default else
+                   self.cd.optimal(rec.job.engine, rec.worker))
+            est = exec_time(ent, rec.job.queries)
+            if now - rec.start < 1.5 * est:
+                continue  # not (yet) a straggler
+            # find the fastest idle worker that could beat the laggard
+            best = None
+            for w in self.cluster.idle_workers(now):
+                ent2 = (self.cd.default_entry(rec.job.engine, w)
+                        if use_default else
+                        self.cd.optimal(rec.job.engine, w))
+                if ent2 is None or ent2.qps <= 0:
+                    continue
+                end2 = now + exec_time(ent2, rec.job.queries)
+                if end2 < rec.end and (best is None or end2 < best[1]):
+                    best = (w, end2, ent2)
+            if best is None:
+                continue
+            w2, end2, ent2 = best
+            ws_old = self.cluster.workers[rec.worker]
+            ws_new = self.cluster.workers[w2]
+            # the backup wins: cancel the original at the backup's finish
+            ws_old.busy_until = end2
+            ws_new.busy_until = end2
+            ws_new.last_assigned = now
+            ws_new.n_jobs += 1
+            extra = end2 - now
+            ws_new.busy_s += extra
+            ws_new.energy_j += ent2.power_w * extra
+            rec.end = end2
+            rec.e2e = end2 - rec.job.arrival
+            rec.exec_s = end2 - rec.start
+            rec.violated = rec.e2e > rec.job.t_qos
+            rec.excess = max(0.0, rec.e2e - rec.job.t_qos)
+            rec.worker = w2
+            rec.config = f"{ent2.mode}/r{ent2.chips_per_replica}"
+            rec.speculated = True
+
+    def _start(self, a: Assignment, now: float, queue, running,
+               first_attempt, decision_time):
+        w = self.cluster.workers[a.worker]
+        assert w.idle(now), f"{a.worker} busy"
+        queue.remove(a.job)
+        exec_s = exec_time(a.entry, a.job.queries) * w.slowdown
+        if self.exec_noise:
+            s = self.exec_noise
+            exec_s *= float(self.rng.lognormal(-0.5 * s * s, s))
+        if self.straggler_prob and self.rng.random() < self.straggler_prob:
+            exec_s *= self.straggler_factor
+        start = now
+        end = start + exec_s
+        w.busy_until = end
+        w.last_assigned = now
+        w.n_jobs += 1
+        w.busy_s += exec_s
+        w.energy_j += a.entry.power_w * exec_s
+        waiting = start - a.job.arrival
+        e2e = end - a.job.arrival
+        overhead = now - first_attempt.get(a.job.id, now)
+        rec = JobResult(a.job, a.worker, f"{a.entry.mode}/r"
+                        f"{a.entry.chips_per_replica}", start, end, waiting,
+                        exec_s, e2e, e2e > a.job.t_qos,
+                        max(0.0, e2e - a.job.t_qos), overhead,
+                        decision_time.get(a.job.id, 0.0))
+        running[a.job.id] = rec

@@ -1,0 +1,58 @@
+"""Heterogeneous worker fleet: TPU slices with operating modes.
+
+TPU-native analogue of the paper's testbed (§3.1): an x86 cloud VM plus two
+ARM edge boards with mode tables.  Here: one 16-chip cloud slice and two
+smaller edge slices whose operating modes mirror Table 2 row-for-row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core.constants import (AGX_LIKE_MODES, CLOUD_MODES, HBM_BW,
+                                  HBM_BYTES, NX_LIKE_MODES, PEAK_FLOPS_BF16,
+                                  V5P_FLOPS_BF16, V5P_HBM_BW, V5P_HBM_BYTES,
+                                  OperatingMode)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerPool:
+    name: str
+    n_chips: int                     # physical chips in the slice
+    modes: tuple                     # available operating modes
+    mesh_shape: tuple                # physical topology
+    is_edge: bool
+    chip_flops: float = PEAK_FLOPS_BF16   # per-chip bf16 peak
+    chip_hbm_bw: float = HBM_BW
+    chip_hbm_bytes: float = HBM_BYTES
+
+    @property
+    def default_mode(self) -> OperatingMode:
+        # The "default configuration" baselines use (paper §5.2: schedulers
+        # without the offline phase "rely on predefined configurations,
+        # typically selecting the worker with the highest CPU resources"):
+        # the stock mode with the most chips online — which, as on real
+        # Jetson boards, is a low-clock mode, not MAXN.
+        most_chips = max(m.chips_online for m in self.modes)
+        cands = [m for m in self.modes if m.chips_online == most_chips]
+        return min(cands, key=lambda m: m.clock_scale)
+
+    def hbm_capacity(self, mode: OperatingMode) -> int:
+        return min(mode.chips_online, self.n_chips) * self.chip_hbm_bytes
+
+
+def default_fleet() -> List[WorkerPool]:
+    """Cloud pod = v5p-class chips (the paper's x86 server analogue: the
+    most powerful node); edge slices = v5e-class with mode tables."""
+    return [
+        WorkerPool("cloud-pod", 16, tuple(CLOUD_MODES), (4, 4), False,
+                   chip_flops=V5P_FLOPS_BF16, chip_hbm_bw=V5P_HBM_BW,
+                   chip_hbm_bytes=V5P_HBM_BYTES),
+        WorkerPool("edge-large", 8, tuple(AGX_LIKE_MODES), (2, 4), True),
+        WorkerPool("edge-small", 6, tuple(NX_LIKE_MODES), (2, 3), True),
+    ]
+
+
+def fleet_by_name(fleet=None) -> Dict[str, WorkerPool]:
+    return {w.name: w for w in (fleet or default_fleet())}

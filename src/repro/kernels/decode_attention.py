@@ -1,0 +1,100 @@
+"""Decode attention Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid walks (batch*kv_head, kv_block); the single query row per (batch, kv
+head) is staged once, KV cache blocks stream through VMEM, and the online
+softmax state is a VMEM scratch.  A validity bound (``k_valid``) masks the
+unwritten tail of the cache buffer (the decode cell's pos+1).
+
+This is the memory-bound hot loop of the decode_32k / long_500k cells: the
+kernel reads each cache block exactly once (roofline-optimal bytes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kv_valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, bk: int, scale: float):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                       # [G, hd]
+    k = k_ref[0]                       # [BK, hd]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [G, BK]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < kv_valid_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, k_valid, *, bk=512, interpret=False):
+    """q: [B, 1, H, hd]; k, v: [B, S, K, hd]; k_valid: scalar int32.
+
+    Returns [B, 1, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    assert Sq == 1
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    bk = min(bk, S)
+    assert S % bk == 0
+    scale = 1.0 / (hd ** 0.5)
+
+    qr = q[:, 0].reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    valid = jnp.broadcast_to(jnp.asarray(k_valid, jnp.int32)[None], (1,))
+
+    kernel = functools.partial(_decode_kernel, bk=bk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * K, S // bk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, qr, kr, vr)
+    return out.reshape(B, K, G, hd).reshape(B, 1, H, hd)

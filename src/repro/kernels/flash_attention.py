@@ -1,0 +1,125 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Blockwise online-softmax attention with explicit VMEM tiling: the grid walks
+(batch*kv_head, q_block, kv_block); q/k/v blocks are staged into VMEM via
+BlockSpec, scores are computed on the MXU with f32 accumulation, and the
+running (m, l, acc) state lives in VMEM scratch across the kv_block axis.
+
+Supports causal masking, sliding-window masking, and GQA (grouped query
+heads are folded into the q-block row dimension so the MXU sees a
+(G*BQ, hd) x (hd, BK) matmul — hardware-aligned when BQ, BK are multiples
+of 128 and hd >= 64).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window, bq: int, bk: int, seq_len: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                    # [G*BQ, hd]
+    k = k_ref[0]                       # [BK, hd]
+    v = v_ref[0]                       # [BK, hd]
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [G*BQ, BK]
+
+    g = q.shape[0] // bq
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 0) % bq
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 1)
+    ok = jnp.ones((g * bq, bk), dtype=jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p, v.astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128,
+                    interpret=False):
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, K, hd] with H % K == 0.
+
+    Returns [B, Sq, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = 1.0 / (hd ** 0.5)
+
+    # [B, Sq, K, G, hd] -> [B*K, Sq*G... ] fold GQA groups into q rows:
+    # layout [B*K, n_q_blocks, G*bq, hd] so one grid row covers one kv head.
+    qr = (q.reshape(B, Sq // bq, bq, K, G, hd)
+           .transpose(0, 3, 1, 4, 2, 5)
+           .reshape(B * K, Sq // bq, G * bq, hd))
+    kr = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+
+    grid = (B * K, Sq // bq, Sk // bk)
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               bq=bq, bk=bk, seq_len=Sk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G * bq, hd), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * bq, hd),
+                               lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, Sq // bq, G * bq, hd),
+                                       q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) running softmax state in VMEM scratch
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return (out.reshape(B, K, Sq // bq, G, bq, hd)
+              .transpose(0, 2, 4, 1, 3, 5)
+              .reshape(B, Sq, H, hd))

@@ -1,0 +1,65 @@
+"""MoE top-k routing Pallas TPU kernel.
+
+Grid walks token blocks; each block's router logits land in VMEM, the
+softmax + iterative top-k (k sequential argmax passes — k is small) runs on
+the VPU, and the kernel emits the renormalized gate matrix (zeros off the
+top-k) that the dispatch einsum consumes.  Token-block tiling keeps the
+[BT, E] working set in VMEM for E up to several hundred experts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _routing_kernel(x_ref, w_ref, gates_ref, *, top_k: int):
+    x = x_ref[...]                      # [BT, D]
+    w = w_ref[...]                      # [D, E]
+    logits = jax.lax.dot_general(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [BT, E]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    # iterative top-k: mask out the argmax k times
+    remaining = probs
+    sel = jnp.zeros_like(probs)
+    for _ in range(top_k):
+        mx = jnp.max(remaining, axis=-1, keepdims=True)
+        pick = (remaining >= mx) & (remaining > 0)
+        # break ties: keep only the first max per row
+        first = jnp.cumsum(pick.astype(jnp.int32), axis=-1) == 1
+        pick = pick & first
+        sel = sel + jnp.where(pick, probs, 0.0)
+        remaining = jnp.where(pick, -1.0, remaining)
+    gates = sel / jnp.maximum(jnp.sum(sel, axis=-1, keepdims=True), 1e-9)
+    gates_ref[...] = gates
+
+
+def moe_routing(x, router_w, top_k: int, *, bt=128, interpret=False):
+    """x: [T, D]; router_w: [D, E] -> gates [T, E] f32 (zeros off top-k,
+    renormalized over the selected experts)."""
+    T, D = x.shape
+    E = router_w.shape[1]
+    bt = min(bt, T)
+    assert T % bt == 0
+    kernel = functools.partial(_routing_kernel, top_k=top_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, E), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, E), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, E), jnp.float32),
+        interpret=interpret,
+    )(x, router_w)

@@ -1,0 +1,82 @@
+"""RWKV6 WKV recurrence Pallas TPU kernel (chunked linear attention).
+
+The TPU-native rethink of the CUDA wkv6 kernel: instead of one thread per
+channel, the sequence is processed in VMEM-resident time chunks per
+(batch, head) grid cell.  Within a chunk the recurrence is an in-register
+loop of rank-1 updates (VPU outer products); the [hd, hd] state is carried
+in VMEM scratch across chunks, so HBM traffic is O(S*hd) instead of
+O(S*hd^2) — this is what makes the ssm/hybrid ``long_500k`` cells
+memory-feasible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # [C, hd]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)  # decay in (0, 1)
+    u = u_ref[0].astype(jnp.float32)     # [1, hd] bonus
+
+    def step(t, carry):
+        state, out = carry
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]     # [hd]
+        kv = kt[:, None] * vt[None, :]              # [hd_k, hd_v]
+        yt = jnp.sum((state + u[0][:, None] * kv) * rt[:, None], axis=0)
+        state = wt[:, None] * state + kv
+        out = out.at[t].set(yt)
+        return state, out
+
+    out0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    state, out = jax.lax.fori_loop(0, chunk, step, (state_scr[...], out0))
+    state_scr[...] = state
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def rwkv_scan(r, k, v, w, u, *, chunk=64, interpret=False):
+    """r/k/v/w: [B, S, H, hd]; u: [H, hd].  Returns [B, S, H, hd].
+
+    w is the per-token decay factor in (0, 1) (already exp(-exp(.))).
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    fold = lambda x: (x.transpose(0, 2, 1, 3)
+                      .reshape(B * H, S // chunk, chunk, hd))
+    rr, kk, vv, ww = fold(r), fold(k), fold(v), fold(w)
+    uu = jnp.broadcast_to(u.reshape(H, 1, hd), (H, 1, hd))
+    uu = jnp.tile(uu, (B, 1, 1))                    # [B*H, 1, hd]
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S // chunk, chunk, hd),
+                                       r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu)
+    return (out.reshape(B, H, S, hd).transpose(0, 2, 1, 3))

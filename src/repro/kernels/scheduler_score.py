@@ -1,0 +1,93 @@
+"""SynergAI Eq. 2-4 scoring Pallas TPU kernel.
+
+At fleet scale (thousands of queued jobs x hundreds of worker pools) the
+scheduler's scoring step is itself a dense [J, W] compute:
+
+    T_est[j, w]   = preproc[j, w] + q[j] / qps[j, w]          (Eq. 2)
+    acceptable    = T_rem[j] >= T_est[j, w]                   (Eq. 3)
+    best[j]       = argmin_w T_est[j, w] over acceptable      (Eq. 4)
+    urgency[j]    = T_rem[j] - min_w T_est[j, w]
+
+Grid walks J-blocks with the full worker axis resident in VMEM; infeasible
+(j, w) pairs carry qps <= 0 and are excluded via masking.  Validated against
+``repro.core.estimator.estimate_matrix`` (the numpy oracle) in the tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38
+
+
+def _score_kernel(qps_ref, pre_ref, q_ref, rem_ref,
+                  est_ref, best_ref, urg_ref, acc_ref):
+    qps = qps_ref[...]                  # [BJ, W]
+    pre = pre_ref[...]
+    q = q_ref[...]                      # [BJ, 1]
+    rem = rem_ref[...]                  # [BJ, 1]
+
+    feas = qps > 0.0
+    est = jnp.where(feas, pre + q / jnp.where(feas, qps, 1.0), BIG)
+    acc = feas & (rem >= est)
+    est_masked = jnp.where(acc, est, BIG)
+    # argmin over acceptable; fall back to argmin over feasible
+    any_acc = jnp.any(acc, axis=1, keepdims=True)
+    pick_from = jnp.where(any_acc, est_masked, est)
+    best = jnp.argmin(pick_from, axis=1)
+    any_feas = jnp.any(feas, axis=1)
+    best = jnp.where(any_feas, best, -1)
+    urgency = rem[:, 0] - jnp.min(est, axis=1)
+
+    est_ref[...] = est
+    best_ref[...] = best.astype(jnp.int32)
+    urg_ref[...] = urgency
+    acc_ref[...] = acc.astype(jnp.int8)
+
+
+def scheduler_score(qps, preproc, queries, t_remaining, *, bj=128,
+                    interpret=False):
+    """qps, preproc: [J, W] f32 (qps <= 0 marks infeasible); queries,
+    t_remaining: [J] f32.  Returns (t_est [J,W], best [J], urgency [J],
+    acceptable [J,W] int8)."""
+    J, W = qps.shape
+    bj = min(bj, J)
+    pad = (-J) % bj
+    if pad:
+        z = lambda a, fill: jnp.pad(a, [(0, pad)] + [(0, 0)] *
+                                    (a.ndim - 1), constant_values=fill)
+        qps, preproc = z(qps, 0.0), z(preproc, 0.0)
+        queries, t_remaining = z(queries, 1.0), z(t_remaining, -1.0)
+        J = J + pad
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(J // bj,),
+        in_specs=[
+            pl.BlockSpec((bj, W), lambda i: (i, 0)),
+            pl.BlockSpec((bj, W), lambda i: (i, 0)),
+            pl.BlockSpec((bj, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bj, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bj, W), lambda i: (i, 0)),
+            pl.BlockSpec((bj,), lambda i: (i,)),
+            pl.BlockSpec((bj,), lambda i: (i,)),
+            pl.BlockSpec((bj, W), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((J, W), jnp.float32),
+            jax.ShapeDtypeStruct((J,), jnp.int32),
+            jax.ShapeDtypeStruct((J,), jnp.float32),
+            jax.ShapeDtypeStruct((J, W), jnp.int8),
+        ],
+        interpret=interpret,
+    )(qps.astype(jnp.float32), preproc.astype(jnp.float32),
+      queries.astype(jnp.float32)[:, None],
+      t_remaining.astype(jnp.float32)[:, None])
+    est, best, urg, acc = out
+    n = J - pad
+    return est[:n], best[:n], urg[:n], acc[:n]

@@ -1,0 +1,140 @@
+"""Optimized-HLO parsing: loop-aware collective byte accounting.
+
+Collectives inside while-loop bodies (layer scans, grad-accumulation loops,
+flash kv-chunk loops) appear once in the HLO text but execute trip-count
+times.  This parser splits the module into computations, reads each while
+loop's trip count from the constant in its condition computation, and
+multiplies body collective bytes accordingly (recursively for nested
+loops).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, list]:
+    """Computation headers look like
+    ``%region_0.1_spmd (param: (s32[], ...)) -> (...) {`` — possibly with
+    nested parens — or ``ENTRY %main.4_spmd (...) -> f32[] {``."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None or s.rstrip().endswith("{"):
+            if s.rstrip().endswith("{") and ("->" in s or
+                                             s.startswith("ENTRY")):
+                m = _COMP_RE.match(s)
+                if m:
+                    cur = m.group(1).split("(")[0]
+                    comps[cur] = []
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def collective_bytes_loop_aware(hlo: str) -> Tuple[Dict[str, int],
+                                                   Dict[str, int]]:
+    """Returns (per-collective bytes, per-collective op counts), scaled by
+    while-loop trip counts.  Bytes are per-device (the module is the SPMD
+    per-device program)."""
+    comps = _split_computations(hlo)
+
+    # per-computation direct collectives and while-calls
+    direct = {}
+    calls = {}
+    for name, lines in comps.items():
+        d = {c: 0 for c in COLLECTIVES}
+        cnt = {c: 0 for c in COLLECTIVES}
+        wh = []
+        for s in lines:
+            if "=" not in s:
+                continue
+            rhs = s.split("=", 1)[1]
+            for coll in COLLECTIVES:
+                mm = re.search(rf"\s{coll}(?:-start)?\(", rhs)
+                if mm:
+                    d[coll] += _shape_bytes(rhs[:mm.start()])
+                    cnt[coll] += 1
+                    break
+            mw = _WHILE_RE.search(rhs)
+            if mw:
+                wh.append((mw.group(1), mw.group(2)))
+        direct[name] = (d, cnt)
+        calls[name] = wh
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for s in comps.get(cond_name, []):
+            for m in _CONST_RE.finditer(s):
+                best = max(best, int(m.group(1)))
+        return best
+
+    memo = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if depth > 32 or name not in direct:
+            return ({c: 0 for c in COLLECTIVES},
+                    {c: 0 for c in COLLECTIVES})
+        d, cnt = direct[name]
+        d, cnt = dict(d), dict(cnt)
+        for cond, body in calls[name]:
+            trips = trip_count(cond)
+            bd, bc = total(body, depth + 1)
+            for c in COLLECTIVES:
+                d[c] += bd[c] * trips
+                cnt[c] += bc[c] * trips
+        memo[name] = (d, cnt)
+        return memo[name]
+
+    # entry computation: the one containing whiles at top level, or the one
+    # named like the jit'd function; fall back to summing roots not called
+    # by anyone.
+    called_bodies = {b for ws in calls.values() for _, b in ws}
+    called_conds = {c for ws in calls.values() for c, _ in ws}
+    roots = [n for n in comps
+             if n not in called_bodies and n not in called_conds
+             and not n.startswith(("fused", "region", "wide."))]
+    agg = {c: 0 for c in COLLECTIVES}
+    cntagg = {c: 0 for c in COLLECTIVES}
+    # prefer a main/entry computation if identifiable
+    mains = [n for n in roots if "main" in n or "entry" in n.lower()]
+    for n in (mains or roots):
+        d, cnt = total(n)
+        for c in COLLECTIVES:
+            agg[c] += d[c]
+            cntagg[c] += cnt[c]
+    return agg, cntagg

@@ -1,0 +1,79 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id>``.
+
+On CPU (this container) it trains the reduced config of the selected
+architecture with checkpoint/restart; on a TPU fleet the same step function
+is what the dry-run lowers against the production mesh (--production shows
+the lowering without executing).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS, get_config
+from repro.models.registry import build_model
+from repro.training import checkpoint
+from repro.training.data import DataLoader
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                          total_steps=args.steps)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    start = 0
+    if args.ckpt_dir and checkpoint.latest_step(args.ckpt_dir) is not None:
+        import numpy as np
+        start = checkpoint.latest_step(args.ckpt_dir)
+        state = checkpoint.restore(args.ckpt_dir,
+                                   jax.tree.map(np.asarray, state))
+        print(f"resumed from step {start}")
+
+    def extra_fn(batch, seq):
+        import numpy as np
+        out = {}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = 0.02 * np.random.default_rng(0).standard_normal(
+                (batch, cfg.vision.n_vision_tokens, cfg.d_model)).astype("float32")
+        if cfg.family == "audio":
+            out["audio_embeds"] = 0.02 * np.random.default_rng(0).standard_normal(
+                (batch, seq, cfg.d_model)).astype("float32")
+        return out
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
+    dl = DataLoader(cfg.vocab, args.batch, args.seq, seed=start,
+                    extra_fn=extra_fn if cfg.family in ("vlm", "audio")
+                    else None)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(dl).items()}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % 10 == 0:
+            print(f"[{args.arch}] step {step + 1:4d} "
+                  f"loss {float(metrics['loss']):.3f} "
+                  f"({(step + 1 - start) / (time.time() - t0):.2f} it/s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt_dir, step + 1, state)
+    dl.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Shared model primitives: norms, RoPE, attention (all variants), MLPs.
+
+All attention here is the pure-JAX (XLA) path used for the multi-device
+dry-run and CPU smoke tests.  The TPU hot-path Pallas kernels in
+``repro.kernels`` implement the same math (validated against ``kernels.ref``)
+and are swapped in on real hardware via ``cfg.use_pallas`` at the ops layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ----------------------------------------------------------------------------
+# initializers
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal-ish init with fan-in on ``in_axis``."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def head_rms_norm(x, scale, eps=1e-6):
+    """qk-norm: RMSNorm over the head_dim of [B, S, H, hd]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: [...]; returns cos/sin of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, S, H, hd]; cos/sin: [B?, S, hd/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # [S, hd/2] -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    elif cos.ndim == 3:  # [B, S, hd/2]
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention (XLA paths)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive mask bias [*, Sq, Sk] from query/key absolute positions."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    k_valid=None):
+    """Reference attention.  q: [B,Sq,H,hd], k/v: [B,Sk,K,hd] (GQA K|H).
+
+    ``q_offset``: absolute position of q[0] (decode).  ``k_valid``: number of
+    valid kv entries (decode with a partially filled cache).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    hd_v = v.shape[-1]  # may differ from hd (MLA)
+    G = H // K
+    q = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    bias = _mask_bias(q_pos, k_pos, causal, window)
+    if k_valid is not None:
+        bias = bias + jnp.where(k_pos[None, :] < k_valid, 0.0, -1e30)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def chunked_flash_attention(q, k, v, *, causal=True, window=None,
+                            chunk=1024, q_offset=0, k_valid=None):
+    """Online-softmax attention, scanning KV chunks — the XLA 'flash' path.
+
+    Memory is O(Sq * chunk) instead of O(Sq * Sk); numerics match
+    ``naive_attention`` to ~1e-3 in bf16 (f32 accumulation throughout).
+
+    Head-major layout: GQA k/v chunks are repeated to the full H query
+    heads *inside* the scan (cheap — one chunk at a time), so the score and
+    accumulator tensors keep a contiguous H dimension that GSPMD shards
+    over the ``model`` axis (inherited from the wq sharding).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    if Sk % chunk != 0:
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, k_valid=k_valid)
+    G = H // K
+    qf = q.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    n_chunks = Sk // chunk
+    ks = k.reshape(B, n_chunks, chunk, K, k.shape[-1])
+    vs = v.reshape(B, n_chunks, chunk, K, hd_v)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, kc, vc = inp
+        if G > 1:  # expand grouped kv heads to the full query-head axis
+            kc = jnp.repeat(kc, G, axis=2)
+            vc = jnp.repeat(vc, G, axis=2)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bshd->bhqs", qf,
+                       kc.astype(jnp.float32)) * scale
+        ok = jnp.ones((Sq, chunk), dtype=bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= q_pos[:, None] - k_pos[None, :] < window
+        if k_valid is not None:
+            ok &= (k_pos < k_valid)[None, :]
+        s = s + jnp.where(ok, 0.0, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd_v), jnp.float32)
+    # remat the chunk body: scan-bwd then recomputes the [B,H,Sq,chunk]
+    # score/prob intermediates instead of stacking them across chunks
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), ks.transpose(1, 0, 2, 3, 4),
+         vs.transpose(1, 0, 2, 3, 4)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, q, k, v, *, causal=True, window=None,
+              q_offset=0, k_valid=None):
+    """Dispatch: chunked flash for long sequences, naive for short ones."""
+    if k.shape[1] >= cfg.flash_threshold:
+        return chunked_flash_attention(q, k, v, causal=causal, window=window,
+                                       chunk=cfg.attn_chunk, q_offset=q_offset,
+                                       k_valid=k_valid)
+    return naive_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, k_valid=k_valid)
+
+
+# ----------------------------------------------------------------------------
+# gated MLPs
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "wg": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params, x, act: str):
+    a = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+    gate = jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)
+    return jnp.einsum("bsf,fd->bsd", a * gate, params["wo"])
+
+
+# ----------------------------------------------------------------------------
+# embedding / head
+
+
+def init_embedding(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": embed_init(k1, (cfg.vocab, cfg.d_model), dtype=dtype),
+        "head": dense_init(k2, (cfg.d_model, cfg.vocab), dtype=dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=dtype),
+    }
+
+
+def embed(params, cfg: ModelConfig, tokens):
+    x = params["tok"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"])
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def chunked_time_scan(step, init, xs, length: int, chunk: int = 64):
+    """Two-level time scan for recurrences (RWKV/Mamba training).
+
+    A flat ``lax.scan`` over S steps saves its carry (the recurrent state)
+    at *every* step for the backward pass — O(S * state) memory, which is
+    tens of GB for the 4k-token train cells.  Chunking saves the carry only
+    at chunk boundaries (O(S/chunk * state)) and remats the inner scan, so
+    the inner per-step residuals live only transiently during that chunk's
+    backward.
+
+    ``xs``: pytree of [S, ...] arrays scanned over the leading axis.
+    Returns (final_carry, ys stacked to [S, ...]).
+    """
+    if length % chunk != 0 or length <= chunk:
+        return jax.lax.scan(step, init, xs)
+    n = length // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def inner(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    inner = jax.checkpoint(inner,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    carry, ys = jax.lax.scan(inner, init, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((length,) + a.shape[2:]), ys)
+    return carry, ys

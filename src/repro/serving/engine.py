@@ -1,0 +1,87 @@
+"""Batched inference engine: prefill + decode loop over the Model API.
+
+This is the per-replica execution engine that SynergAI schedules.  One
+``InferenceEngine`` corresponds to one deployed "inference engine" in the
+paper's terminology: (architecture x serving configuration) on one worker.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.serving import sampling
+from repro.serving.kvcache import cache_bytes, pad_cache
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+    batches: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class InferenceEngine:
+    """Greedy/stochastic batched generation with a persistent KV cache."""
+
+    def __init__(self, model: Model, params, max_len: int = 256,
+                 sampler: Callable = sampling.greedy, donate: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.sampler = sampler
+        self.stats = EngineStats()
+        self._prefill = jax.jit(model.prefill)
+        # donate the cache buffers across steps
+        self._decode = jax.jit(model.decode,
+                               donate_argnums=(1,) if donate else ())
+
+    def generate(self, batch: dict, n_tokens: int, key=None):
+        """batch: model input_specs-shaped dict with real arrays.
+
+        Returns tokens [B, n_tokens].
+        """
+        B = (batch.get("tokens") if "tokens" in batch
+             else batch["token"]).shape[0]
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, batch)
+        prompt_len = batch["tokens"].shape[1]
+        ctx_len = (batch["audio_embeds"].shape[1]
+                   if "audio_embeds" in batch else None)
+        template = self.model.init_cache(B, self.max_len, ctx_len)
+        caches = pad_cache(caches, template)
+        jax.block_until_ready(logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += B * prompt_len
+
+        t0 = time.perf_counter()
+        outs = []
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok = self.sampler(logits, key)
+        for i in range(n_tokens):
+            outs.append(tok)
+            if i == n_tokens - 1:
+                break
+            step = {"token": tok[:, None],
+                    "pos": jnp.int32(prompt_len + i)}
+            logits, caches = self._decode(self.params, caches, step)
+            key, sub = jax.random.split(key)
+            tok = self.sampler(logits, sub)
+        jax.block_until_ready(tok)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decoded_tokens += B * n_tokens
+        self.stats.batches += 1
+        return jnp.stack(outs, axis=1)
+
+    def cache_footprint(self, B: int) -> int:
+        shapes = jax.eval_shape(lambda: self.model.init_cache(B, self.max_len))
+        import numpy as np
+        return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                       for l in jax.tree.leaves(shapes)))

@@ -1,0 +1,34 @@
+"""Cache utilities: buffer extension, size accounting."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_cache(caches, template):
+    """Embed prefill-produced caches into decode-sized buffers.
+
+    ``template`` comes from ``model.init_cache(B, buf_len)``.  Leaves whose
+    shapes already match (ring buffers, recurrent states, cross-attn caches)
+    are kept; sequence buffers are written into the zeroed template at
+    offset 0.
+    """
+
+    def one(c, t):
+        if c is None:
+            return t
+        if c.shape == t.shape:
+            return c.astype(t.dtype)
+        assert len(c.shape) == len(t.shape), (c.shape, t.shape)
+        start = (0,) * c.ndim
+        return jax.lax.dynamic_update_slice(t, c.astype(t.dtype), start)
+
+    return jax.tree.map(one, caches, template,
+                        is_leaf=lambda x: x is None)
+
+
+def cache_bytes(caches) -> int:
+    leaves = jax.tree.leaves(caches)
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in leaves))

@@ -1,0 +1,22 @@
+"""Token sampling policies for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits, key=None):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp=1.0):
+    return jax.random.categorical(key, logits / jnp.maximum(temp, 1e-6),
+                                  axis=-1).astype(jnp.int32)
+
+
+def top_k(logits, key, k=40, temp=1.0):
+    vals, idx = jax.lax.top_k(logits, k)
+    choice = jax.random.categorical(key, vals / jnp.maximum(temp, 1e-6),
+                                    axis=-1)
+    return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0]

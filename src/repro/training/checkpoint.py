@@ -1,0 +1,101 @@
+"""Fault-tolerant checkpointing: atomic save, restore, resume discovery.
+
+Pure numpy .npz snapshots of the flattened train-state pytree with a JSON
+treedef manifest; writes are crash-safe (tmp file + atomic rename) and old
+checkpoints are garbage-collected.  This is the checkpoint/restart leg of the
+fault-tolerance story (the scheduler-level failure handling lives in
+``repro.core.simulator``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str, step: int, state: Any, keep: int = 3) -> str:
+    """Atomically write ``ckpt_<step>.npz``; prune to the newest ``keep``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = _flatten_with_paths(state)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        final = os.path.join(ckpt_dir, f"ckpt_{step}.npz")
+        os.replace(tmp, final)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    manifest = {"latest_step": step}
+    mtmp = os.path.join(ckpt_dir, "manifest.json.tmp")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(ckpt_dir, "manifest.json"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        try:
+            os.unlink(os.path.join(ckpt_dir, f"ckpt_{s}.npz"))
+        except OSError:
+            pass
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with np.load(os.path.join(ckpt_dir, f"ckpt_{step}.npz")) as data:
+        arrays = dict(data)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the 512-device override is only
+# ever set inside launch/dryrun.py, per the dry-run contract)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def configdict():
+    from repro.core.offline import characterize
+    return characterize()

@@ -1,0 +1,69 @@
+"""Dry-run integration: one real cell lowered+compiled on the production
+mesh in a subprocess (the 512-device override must stay process-local),
+plus unit tests of the sharding rule system on a small mesh."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_compiles(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "h2o-danube-1.8b", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    rec = json.load(open(tmp_path / "h2o-danube-1.8b__decode_32k__single.json"))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["jaxpr_flops_global"] > 0
+    assert rec["memory"]["temp_bytes"] is not None
+
+
+def test_sharding_rules_divisibility_fallback():
+    """GQA kv heads that don't divide the model axis must replicate, not
+    fail; batch=1 must not shard over data."""
+    os.environ.setdefault("XLA_FLAGS", "")
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed import sharding as sh
+    from repro.launch.mesh import make_mesh
+
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run via subprocess dryrun instead)")
+    mesh = make_mesh((1, 2), ("data", "model"))
+    params = {"groups": [{"attn": {
+        "wq": jnp.zeros((4, 64, 8, 16)),   # heads=8 divisible by 2
+        "wk": jnp.zeros((4, 64, 3, 16)),   # kv=3 NOT divisible
+    }}]}
+    specs = sh.param_pspecs(params, mesh)
+    wq = specs["groups"][0]["attn"]["wq"]
+    wk = specs["groups"][0]["attn"]["wk"]
+    assert "model" in tuple(wq)
+    assert "model" not in tuple(wk)
+
+
+def test_cache_pspecs_prefers_largest_divisible_dim():
+    import jax.numpy as jnp
+
+    from repro.distributed import sharding as sh
+    from repro.launch.mesh import make_mesh
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device")
+    mesh = make_mesh((1, 2), ("data", "model"))
+    cache = [{"k": jnp.zeros((4, 2, 64, 3, 16))}]   # [n, B, S, K, hd]
+    specs = sh.cache_pspecs(cache, mesh)
+    spec = tuple(specs[0]["k"])
+    assert "model" in spec  # S=64 sharded
+    assert spec.index("model") == 2

@@ -1,0 +1,92 @@
+"""Fault-tolerance & scale features: speculative straggler re-dispatch,
+elastic pool scaling, checkpoint/restart resume equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.job import make_experiment
+from repro.core.metrics import summarize
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import FailureEvent, Simulator
+
+
+def test_speculative_redispatch_beats_stragglers(configdict):
+    jobs = make_experiment(configdict, "DL", "FL", seed=9)
+    kw = dict(exec_noise=0.0, straggler_prob=0.3, straggler_factor=6.0,
+              seed=9)
+    plain = Simulator(configdict, SynergAI(), speculative=False, **kw)
+    spec = Simulator(configdict, SynergAI(), speculative=True, **kw)
+    r_plain = plain.run(jobs)
+    r_spec = spec.run(jobs)
+    assert len(r_spec) == len(jobs)
+    e2e_plain = sum(r.e2e for r in r_plain)
+    e2e_spec = sum(r.e2e for r in r_spec)
+    assert e2e_spec < e2e_plain, "speculation should cut straggler latency"
+    assert any(r.speculated for r in r_spec)
+
+
+def test_elastic_scaling_reduces_violations(configdict):
+    # triple arrival intensity to force queue pressure
+    jobs = make_experiment(configdict, "DH", "FH", seed=4, intensity=12.0)
+    fixed = Simulator(configdict, SynergAI(), seed=4)
+    elastic = Simulator(configdict, SynergAI(), elastic_max=3,
+                        elastic_threshold=4, seed=4)
+    s_fixed = summarize(fixed.run(jobs))
+    s_elastic = summarize(elastic.run(jobs))
+    assert len(elastic.cluster.workers) >= 4 or elastic._clones >= 0
+    assert s_elastic["violations"] <= s_fixed["violations"]
+    assert s_elastic["waiting_avg_s"] <= s_fixed["waiting_avg_s"] + 1e-9
+
+
+def test_failure_plus_speculation_still_conserves(configdict):
+    jobs = make_experiment(configdict, "DL", "FH", seed=2)
+    sim = Simulator(configdict, SynergAI(), speculative=True,
+                    failures=[FailureEvent("edge-large", 30.0, 200.0)],
+                    straggler_prob=0.2, seed=2)
+    res = sim.run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+
+
+def test_training_resume_equivalence(tmp_path):
+    """Restarting from a checkpoint reproduces the uninterrupted run."""
+    from repro.configs.base import reduced
+    from repro.configs.registry import get_config
+    from repro.models.registry import build_model
+    from repro.training import checkpoint
+    from repro.training.data import DataLoader
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_step import init_train_state, make_train_step
+
+    cfg = reduced(get_config("h2o-danube-1.8b"))
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+    def batches(n, seed=0):
+        gen = DataLoader(cfg.vocab, 4, 16, seed=seed)
+        out = [next(gen) for _ in range(n)]
+        gen.close()
+        return [{k: jnp.asarray(v) for k, v in b.items()} for b in out]
+
+    bs = batches(10)
+    # uninterrupted run
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    for b in bs:
+        state, _ = step_fn(state, b)
+    ref_loss = float(step_fn(state, bs[0])[1]["loss"])
+
+    # interrupted run: checkpoint at step 5, restore, continue
+    state2 = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    for b in bs[:5]:
+        state2, _ = step_fn(state2, b)
+    checkpoint.save(str(tmp_path), 5, state2)
+    restored = checkpoint.restore(str(tmp_path),
+                                  jax.tree.map(np.asarray, state2))
+    restored = jax.tree.map(jnp.asarray, restored)
+    for b in bs[5:]:
+        restored, _ = step_fn(restored, b)
+    resumed_loss = float(step_fn(restored, bs[0])[1]["loss"])
+    assert np.isclose(ref_loss, resumed_loss, rtol=1e-5), (
+        ref_loss, resumed_loss)

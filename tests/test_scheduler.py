@@ -1,0 +1,243 @@
+"""SynergAI core tests: Eq. 1-4 estimator, policies, simulator invariants,
+and the paper's headline orderings — plus hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.baselines import (BestEffort, LeastRecentlyUsed,
+                                  MostRecentlyUsed, RoundRobin,
+                                  StrictRoundRobin)
+from repro.core.engines import default_engines
+from repro.core.estimator import candidate_order, estimate_matrix
+from repro.core.job import Job, exec_time, make_experiment
+from repro.core.metrics import summarize
+from repro.core.offline import characterize, cold_start_config
+from repro.core.perfmodel import ConfigPoint, config_space, estimate, profile_engine
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import FailureEvent, Simulator
+from repro.core.slo_mael import SloMael
+from repro.core.workers import default_fleet
+
+WORKERS = ["cloud-pod", "edge-large", "edge-small"]
+
+
+# ----------------------------------------------------------------------------
+# offline phase
+
+
+def test_configdict_has_optimal_for_every_feasible_pair(configdict):
+    engines = default_engines()
+    n = 0
+    for e in engines:
+        for w in WORKERS:
+            ent = configdict.optimal(e, w)
+            if ent is not None:
+                assert ent.qps > 0
+                n += 1
+    assert n >= 30  # most engine/worker pairs are feasible
+
+
+def test_optimal_beats_default(configdict):
+    """The offline phase must never pick a config worse than the default."""
+    for e in default_engines():
+        for w in WORKERS:
+            opt = configdict.optimal(e, w)
+            def_ = configdict.default_entry(e, w)
+            if opt and def_:
+                assert opt.qps >= def_.qps * 0.999, (e, w)
+
+
+def test_deepseek_cloud_only(configdict):
+    """The 236B MoE must be infeasible on edge slices (heterogeneity)."""
+    assert configdict.optimal("deepseek-v2/int8", "cloud-pod") is not None
+    assert configdict.optimal("deepseek-v2/int8", "edge-small") is None
+
+
+def test_cold_start_heuristic():
+    for pool in default_fleet():
+        point = cold_start_config(pool)
+        # highest frequency band selected (paper §4.2)
+        best = max(m.effective_clock() for m in pool.modes)
+        assert point.mode.effective_clock() >= 0.95 * best
+        assert point.chips_per_replica <= pool.n_chips
+
+
+def test_perfmodel_feasibility_monotone_in_chips():
+    """More chips per replica never makes a feasible engine infeasible."""
+    engines = default_engines()
+    e = engines["qwen3-32b/bf16"]
+    pool = default_fleet()[0]
+    mode = pool.modes[0]
+    feas = [estimate(e, pool, ConfigPoint(mode, r)).feasible
+            for r in (1, 2, 4, 8, 16)]
+    # once feasible, stays feasible
+    first = feas.index(True) if True in feas else len(feas)
+    assert all(feas[first:]), feas
+
+
+# ----------------------------------------------------------------------------
+# estimator (Eq. 1-4)
+
+
+def _mkjob(jid, engine, q=1000, t_qos=500.0, arrival=0.0):
+    return Job(jid, engine, q, t_qos, arrival)
+
+
+def test_eq1_remaining_time(configdict):
+    jobs = [_mkjob(0, "gemma-2b/bf16", t_qos=100.0, arrival=10.0)]
+    s = estimate_matrix(configdict, jobs, WORKERS, now=30.0)
+    assert np.isclose(s.t_remaining[0], 80.0)  # Eq. 1
+
+
+def test_eq2_estimated_time(configdict):
+    jobs = [_mkjob(0, "gemma-2b/bf16", q=2000)]
+    s = estimate_matrix(configdict, jobs, WORKERS, now=0.0)
+    ent = configdict.optimal("gemma-2b/bf16", "cloud-pod")
+    expect = ent.preproc_s + 2000 / ent.qps
+    assert np.isclose(s.t_estimated[0][WORKERS.index("cloud-pod")], expect)
+
+
+def test_eq3_eq4_acceptable_and_argmin(configdict):
+    jobs = [_mkjob(0, "qwen3-32b/bf16", q=1000, t_qos=200.0)]
+    s = estimate_matrix(configdict, jobs, WORKERS, now=0.0)
+    fin = np.isfinite(s.t_estimated[0])
+    acc = s.acceptable[0] & fin
+    if acc.any():
+        best = s.best_worker[0]
+        masked = np.where(acc, s.t_estimated[0], np.inf)
+        assert best == masked.argmin()  # Eq. 4
+
+
+def test_doomed_detection(configdict):
+    jobs = [_mkjob(0, "qwen3-32b/bf16", q=5000, t_qos=1.0)]
+    s = estimate_matrix(configdict, jobs, WORKERS, now=0.0)
+    assert bool(s.doomed[0])
+    # doomed jobs still get a candidate list (fastest completion first)
+    cands = candidate_order(s, 0, np.zeros(len(WORKERS)))
+    assert cands, "doomed job must still be schedulable"
+
+
+@settings(max_examples=50, deadline=None)
+@given(q1=st.integers(100, 5000), q2=st.integers(100, 5000),
+       t_qos=st.floats(10.0, 5000.0), now=st.floats(0.0, 100.0))
+def test_estimator_properties(configdict_, q1, q2, t_qos, now):
+    cd = configdict_
+    jobs = [_mkjob(0, "gemma-2b/bf16", q=q1, t_qos=t_qos),
+            _mkjob(1, "gemma-2b/bf16", q=q2, t_qos=t_qos)]
+    s = estimate_matrix(cd, jobs, WORKERS, now=now)
+    # monotonicity: more queries -> more estimated time on every worker
+    if q1 <= q2:
+        assert np.all(s.t_estimated[0] <= s.t_estimated[1] + 1e-9)
+    # acceptability shrinks as waiting grows (Eq. 1/3 coupling)
+    s_later = estimate_matrix(cd, jobs, WORKERS, now=now + 50.0)
+    assert np.all(s_later.acceptable <= s.acceptable)
+    # urgency decreases exactly with elapsed time
+    assert np.allclose(s.urgency - 50.0, s_later.urgency)
+
+
+@pytest.fixture(scope="module")
+def configdict_():
+    return characterize()
+
+
+# ----------------------------------------------------------------------------
+# simulator invariants
+
+
+POLICIES = [RoundRobin, StrictRoundRobin, LeastRecentlyUsed,
+            MostRecentlyUsed, BestEffort, SloMael, SynergAI]
+
+
+@pytest.mark.parametrize("policy_cls", POLICIES)
+def test_simulator_conservation(configdict, policy_cls):
+    """Every job executes exactly once; times are consistent."""
+    jobs = make_experiment(configdict, "DL", "FH", seed=7)
+    res = Simulator(configdict, policy_cls(), seed=7).run(jobs)
+    assert len(res) == len(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    for r in res:
+        assert r.start >= r.job.arrival - 1e-9
+        assert np.isclose(r.e2e, r.end - r.job.arrival)
+        assert np.isclose(r.waiting, r.start - r.job.arrival)
+        assert r.exec_s > 0
+        assert r.excess >= 0
+        assert r.violated == (r.e2e > r.job.t_qos)
+
+
+@pytest.mark.parametrize("policy_cls", POLICIES)
+def test_no_worker_overlap(configdict, policy_cls):
+    """Strict isolation: at most one job on a worker at any time."""
+    jobs = make_experiment(configdict, "DH", "FH", seed=3)
+    res = Simulator(configdict, policy_cls(), seed=3).run(jobs)
+    by_worker = {}
+    for r in res:
+        by_worker.setdefault(r.worker, []).append((r.start, r.end))
+    for w, spans in by_worker.items():
+        spans.sort()
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert s2 >= e1 - 1e-6, f"overlap on {w}"
+
+
+def test_synergai_uses_optimal_configs(configdict):
+    jobs = make_experiment(configdict, "DL", "FL", seed=1)
+    res = Simulator(configdict, SynergAI(), seed=1).run(jobs)
+    for r in res:
+        ent = configdict.optimal(r.job.engine, r.worker)
+        assert r.config == f"{ent.mode}/r{ent.chips_per_replica}"
+
+
+def test_baselines_use_default_configs(configdict):
+    jobs = make_experiment(configdict, "DL", "FL", seed=1)
+    res = Simulator(configdict, RoundRobin(), seed=1).run(jobs)
+    for r in res:
+        ent = configdict.default_entry(r.job.engine, r.worker)
+        assert r.config == f"{ent.mode}/r{ent.chips_per_replica}"
+
+
+def test_headline_orderings(configdict):
+    """Paper's core claims, aggregated over seeds: SynergAI has the fewest
+    violations; SRR has the worst waiting time."""
+    totals = {}
+    waits = {}
+    for P in [RoundRobin, StrictRoundRobin, SloMael, SynergAI]:
+        v, w = 0, []
+        for seed in (1, 2, 3):
+            for d, f in [("DL", "FL"), ("DL", "FH"), ("DH", "FH")]:
+                jobs = make_experiment(configdict, d, f, seed=seed)
+                s = summarize(Simulator(configdict, P(), seed=seed).run(jobs))
+                v += s["violations"]
+                w.append(s["waiting_avg_s"])
+        totals[P.name] = v
+        waits[P.name] = np.mean(w)
+    assert totals["SynergAI"] < totals["SLO-MAEL"]
+    assert totals["SynergAI"] < totals["RR"]
+    assert totals["SynergAI"] < totals["SRR"]
+    assert waits["SRR"] == max(waits.values())
+
+
+# ----------------------------------------------------------------------------
+# fault tolerance / robustness
+
+
+def test_worker_failure_requeues_and_completes(configdict):
+    jobs = make_experiment(configdict, "DL", "FL", seed=5)
+    failures = [FailureEvent("cloud-pod", at=50.0, duration=300.0)]
+    res = Simulator(configdict, SynergAI(), failures=failures,
+                    seed=5).run(jobs)
+    assert len(res) == len(jobs)           # everything still completes
+    for r in res:
+        ws = [f for f in failures if f.worker == r.worker]
+        for f in ws:  # nothing runs inside a failure window
+            assert r.end <= f.at + 1e-6 or r.start >= f.at + f.duration - 1e-6
+
+
+def test_straggler_injection_slows_jobs(configdict):
+    jobs = make_experiment(configdict, "DL", "FL", seed=5)
+    base = Simulator(configdict, SynergAI(), exec_noise=0.0, seed=5).run(jobs)
+    slow = Simulator(configdict, SynergAI(), exec_noise=0.0,
+                     straggler_prob=0.5, straggler_factor=4.0,
+                     seed=5).run(jobs)
+    assert (sum(r.exec_s for r in slow) >
+            1.5 * sum(r.exec_s for r in base))
