@@ -1,7 +1,19 @@
 """Fig. 7/8/9/10 analogues: the three experiments (DL-FL, DL-FH, DH-FH) for
-all policies + SLO-MAEL comparison, aggregated over seeds."""
+all policies + SLO-MAEL comparison, aggregated over seeds — plus the
+fleet-scale benches:
+
+* ``bench_fleet``   — 10k-job x 64-pool MMPP scenario under every policy on
+  the event-heap engine, and the old-vs-new simulator wall-clock
+  head-to-head (seed tick-scanning loop vs indexed event heap).
+* ``bench_scoring`` — numpy ``estimate_matrix`` vs the Pallas
+  ``scheduler_score`` kernel at J~2048 x W=256.
+
+Run standalone:  PYTHONPATH=src python benchmarks/scheduler_experiments.py
+"""
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -61,3 +73,127 @@ def run(cd=None, seeds=(1, 2, 3, 4, 5), emit=print):
     emit(f"scheduler_headline,excess_baselines_over_synergai="
          f"{e_base / max(e_syn, 1e-9):.2f}x,paper=5.3x")
     return results
+
+
+# ---------------------------------------------------------------------------
+# fleet scale
+
+
+def bench_fleet(cd=None, n_jobs=10_000, pools=(8, 28, 28),
+                utilization=0.8, kind="mmpp", with_failures=True,
+                emit=print):
+    """The 10k-job x 64-pool scenario under every policy (event heap), then
+    the old-vs-new simulator wall-clock comparison."""
+    from repro.core.simulator import Simulator
+    from repro.core.simulator_legacy import LegacySimulator
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario, synth_failures
+
+    cd = cd or characterize()
+    fleet = synth_fleet(*pools)
+    W = len(fleet)
+    jobs = scenario(cd, kind, n_jobs=n_jobs, fleet=fleet,
+                    utilization=utilization, seed=0)
+    span = jobs[-1].arrival
+    failures = (synth_failures(fleet, span, mtbf_s=span, mttr_s=120.0,
+                               seed=0) if with_failures else [])
+    emit(f"fleet_scenario,{kind},jobs={n_jobs},pools={W},"
+         f"span_s={span:.0f},failures={len(failures)}")
+    walls = {}
+    for P in POLICIES:
+        t0 = time.perf_counter()
+        res = Simulator(cd, P(), fleet=fleet, failures=failures,
+                        seed=0).run(jobs)
+        dt = time.perf_counter() - t0
+        walls[(P.name, "event-heap")] = (dt, sum(r.violated for r in res))
+        s = summarize(res)
+        emit(f"fleet,{kind},{P.name},violations={s['violations']},"
+             f"wait_s={s['waiting_avg_s']:.1f},p99_s={s['e2e_p99_s']:.1f},"
+             f"wall_s={dt:.2f},jobs_per_s={n_jobs / dt:.0f}")
+    # old vs new: the seed's tick-scanning loop (rescans every worker,
+    # failure and running job per iteration) against the indexed event
+    # heap, on the full trace.  The event-heap runs above (same trace,
+    # same seed) already produced the "new" numbers; only the legacy loop
+    # needs to run here.  SynergAI is scoring-bound so the engines tie
+    # there; the cheap policies expose the loop overhead itself.
+    for P in (SynergAI, RoundRobin, StrictRoundRobin):
+        t0 = time.perf_counter()
+        res = LegacySimulator(cd, P(), fleet=fleet, failures=failures,
+                              seed=0).run(jobs)
+        walls[(P.name, "legacy")] = (time.perf_counter() - t0,
+                                     sum(r.violated for r in res))
+        for label in ("legacy", "event-heap"):
+            wall, viol = walls[(P.name, label)]
+            emit(f"simulator,{label},{P.name},jobs={n_jobs},pools={W},"
+                 f"wall_s={wall:.2f},violations={viol}")
+        speedup = (walls[(P.name, "legacy")][0]
+                   / max(walls[(P.name, "event-heap")][0], 1e-9))
+        emit(f"simulator_headline,{P.name},"
+             f"event_heap_speedup={speedup:.2f}x")
+    return walls
+
+
+def bench_scoring(cd=None, J=2048, pools=(86, 85, 85), iters=5, emit=print):
+    """numpy estimate_matrix vs the Pallas scheduler_score kernel on a
+    fleet-scale queue (J x 256)."""
+    from repro.core.estimator import estimate_matrix
+    from repro.core.pallas_scoring import make_pallas_score_fn
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario
+
+    cd = cd or characterize()
+    fleet = synth_fleet(*pools)
+    workers = [w.name for w in fleet]
+    jobs = scenario(cd, "multi-tenant", n_jobs=J, fleet=fleet,
+                    seed=0)
+    now = jobs[-1].arrival  # everything queued
+    pallas_fn = make_pallas_score_fn()
+    s_np = s_pl = None
+    walls = {}
+    for label, fn in (("numpy", estimate_matrix), ("pallas", pallas_fn)):
+        fn(cd, jobs, workers, now)       # warm caches / tracing
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(cd, jobs, workers, now)
+        walls[label] = (time.perf_counter() - t0) / iters
+        if label == "numpy":
+            s_np = out
+        else:
+            s_pl = out
+        emit(f"scoring,{label},J={len(jobs)},W={len(workers)},"
+             f"wall_ms={walls[label] * 1e3:.2f}")
+    agree = int((s_np.best_worker == s_pl.best_worker).sum())
+    # interpret mode emulates the TPU kernel op-by-op on CPU — the point
+    # here is bit-level agreement and the [J, W] shape, not speed; compiled
+    # TPU numbers come from benchmarks/kernels_bench.py on real hardware
+    emit(f"scoring_headline,pallas_interpret_vs_numpy="
+         f"{walls['numpy'] / max(walls['pallas'], 1e-9):.2f}x,"
+         f"best_worker_agree={agree}/{len(jobs)}")
+    return walls
+
+
+def main(argv=None):
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--jobs", type=int, default=10_000)
+    p.add_argument("--pools", type=int, nargs=3, default=(8, 28, 28),
+                   metavar=("CLOUD", "EDGE_LG", "EDGE_SM"))
+    p.add_argument("--kind", default="mmpp")
+    p.add_argument("--skip-paper", action="store_true",
+                   help="skip the 24-job paper experiments")
+    p.add_argument("--skip-scoring", action="store_true")
+    args = p.parse_args(argv)
+    cd = characterize()
+    if not args.skip_paper:
+        print("# paper experiments (Fig. 7-10)")
+        run(cd, seeds=(1, 2, 3))
+    if not args.skip_scoring:
+        print("# scoring: numpy vs Pallas kernel")
+        bench_scoring(cd)
+    print(f"# fleet scale ({args.kind})")
+    bench_fleet(cd, n_jobs=args.jobs, pools=tuple(args.pools),
+                kind=args.kind)
+
+
+if __name__ == "__main__":
+    main()

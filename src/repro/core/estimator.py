@@ -30,27 +30,83 @@ class ScoreResult:
     doomed: np.ndarray             # [J] bool — no acceptable worker
 
 
+class _EngineTable:
+    """Stacked per-engine (qps, preproc) rows over a fixed worker list.
+
+    The scheduler re-scores the whole queue every tick; at fleet scale that
+    makes the [J, W] matrix build the hot path.  Engine rows are profiled
+    once into a dense [E, W] table, and each call gathers job rows with a
+    single C-speed fancy index instead of J x W ConfigDict lookups."""
+
+    def __init__(self, cd: ConfigDict, workers: List[str],
+                 use_default: bool):
+        self.cd = cd
+        self.workers = list(workers)
+        self.use_default = use_default
+        self.index: Dict[str, int] = {}
+        self.qps = np.empty((0, len(workers)))
+        self.pre = np.empty((0, len(workers)))
+
+    def _add(self, engine: str):
+        W = len(self.workers)
+        q = np.zeros(W)
+        p = np.zeros(W)
+        for wi, w in enumerate(self.workers):
+            ent = (self.cd.default_entry(engine, w) if self.use_default
+                   else self.cd.optimal(engine, w))
+            if ent is not None and ent.qps > 0:
+                q[wi] = ent.qps
+                p[wi] = ent.preproc_s
+        self.index[engine] = len(self.qps)
+        self.qps = np.vstack([self.qps, q[None]])
+        self.pre = np.vstack([self.pre, p[None]])
+
+    def gather(self, jobs: Sequence[Job]):
+        idx = self.index
+        try:
+            rows = np.fromiter((idx[j.engine] for j in jobs),
+                               dtype=np.intp, count=len(jobs))
+        except KeyError:     # first sighting of an engine: profile it
+            for job in jobs:
+                if job.engine not in idx:
+                    self._add(job.engine)
+            rows = np.fromiter((idx[j.engine] for j in jobs),
+                               dtype=np.intp, count=len(jobs))
+        return self.qps[rows], self.pre[rows]
+
+
+def score_matrices(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
+                   use_default: bool = False):
+    """[J, W] qps / preproc matrices from the Configuration Dictionary
+    (``qps == 0`` marks infeasible pairs), cached per worker tuple on the
+    ConfigDict.  Shared input builder for the numpy scorer below and the
+    Pallas kernel path (``repro.core.pallas_scoring``)."""
+    cache = cd.__dict__.setdefault("_row_cache", {})
+    key = (use_default, tuple(workers))
+    tab = cache.get(key)
+    if tab is None:
+        tab = cache[key] = _EngineTable(cd, workers, use_default)
+    return tab.gather(jobs)
+
+
 def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
                     now: float, use_default: bool = False) -> ScoreResult:
     """Vectorized Eq. 1-4 over all queued jobs and all workers."""
-    J, W = len(jobs), len(workers)
-    t_est = np.full((J, W), np.inf)
-    for ji, job in enumerate(jobs):
-        for wi, w in enumerate(workers):
-            ent = (cd.default_entry(job.engine, w) if use_default
-                   else cd.optimal(job.engine, w))
-            if ent is None or ent.qps <= 0:
-                continue
-            t_est[ji, wi] = ent.preproc_s + job.queries / ent.qps  # Eq. 2
-    t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])  # Eq. 1
+    J = len(jobs)
+    qps, pre = score_matrices(cd, jobs, workers, use_default)
+    q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
+                    count=J)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_est = np.where(qps > 0, pre + q[:, None] / qps, np.inf)  # Eq. 2
+    t_rem = np.fromiter((j.t_qos - (now - j.arrival) for j in jobs),
+                        dtype=np.float64, count=J)                 # Eq. 1
     acceptable = t_rem[:, None] >= t_est                           # Eq. 3
     # Eq. 4: argmin over acceptable workers; fall back to global argmin of
     # feasible workers when nothing is acceptable (doomed jobs still run).
     masked = np.where(acceptable, t_est, np.inf)
-    best = np.where(np.isfinite(masked).any(1), masked.argmin(1),
-                    np.where(np.isfinite(t_est).any(1), t_est.argmin(1), -1))
-    min_est = np.where(np.isfinite(t_est).any(1), np.nanmin(
-        np.where(np.isfinite(t_est), t_est, np.nan), axis=1), np.inf)
+    min_est = t_est.min(axis=1)     # inf where nothing is feasible
+    best = np.where(np.isfinite(masked.min(axis=1)), masked.argmin(1),
+                    np.where(np.isfinite(min_est), t_est.argmin(1), -1))
     urgency = t_rem - min_est       # -> 0 means about to violate
     doomed = ~acceptable.any(axis=1)
     return ScoreResult(workers, t_est, t_rem, acceptable,

@@ -36,9 +36,31 @@ def exec_time(entry, queries: int) -> float:
 def exec_time_distribution(cd: ConfigDict, queries: int = DEFAULT_QUERIES,
                            engine: Optional[str] = None) -> np.ndarray:
     """Execution times across all configurations and workers (paper §5.1)."""
-    times = [exec_time(e, queries) for e in cd.table
-             if e.qps > 0 and (engine is None or e.engine == engine)]
-    return np.asarray(times)
+    pre, qps = _dist_arrays(cd, engine)
+    return pre + queries / qps
+
+
+def _dist_arrays(cd: ConfigDict, engine: Optional[str]):
+    # (preproc, qps) vectors over the feasible DSE table rows, cached on the
+    # ConfigDict: workload generators call this once per *job* at fleet
+    # scale, so the per-call table scan has to go.
+    cache = cd.__dict__.setdefault("_dist_cache", {})
+    arr = cache.get(engine)
+    if arr is None:
+        ents = [e for e in cd.table
+                if e.qps > 0 and (engine is None or e.engine == engine)]
+        arr = cache[engine] = (np.array([e.preproc_s for e in ents]),
+                               np.array([e.qps for e in ents]))
+    return arr
+
+
+def qos_threshold(cd: ConfigDict, engine: str, queries: int,
+                  pct: float) -> float:
+    """QoS demand for an engine at a given query count: the pct-percentile
+    of its execution-time distribution (paper §5.1, DL=50 / DH=25,
+    generalized to arbitrary job sizes for the fleet-scale workloads)."""
+    return float(np.percentile(exec_time_distribution(cd, queries, engine),
+                               pct))
 
 
 def make_experiment(cd: ConfigDict, demand: str, freq: str,
@@ -46,17 +68,15 @@ def make_experiment(cd: ConfigDict, demand: str, freq: str,
                     seed: int = 0,
                     engines: Optional[Dict[str, EngineSpec]] = None,
                     intensity: float = 4.0) -> List[Job]:
-    """Build a DL-FL / DL-FH / DH-FH job set."""
+    """Build a DL-FL / DL-FH / DH-FH job set (paper-fidelity wrapper; the
+    general fleet-scale generators live in ``repro.core.workload``)."""
     assert demand in ("DL", "DH") and freq in ("FL", "FH")
     engines = engines or default_engines()
     rng = np.random.default_rng(seed)
     names = list(engines)
     # demands per engine: median (DL) / 25%-ile (DH) of its exec-time dist
-    t_qos = {}
-    for name in names:
-        dist = exec_time_distribution(cd, queries, engine=name)
-        pct = 50 if demand == "DL" else 25
-        t_qos[name] = float(np.percentile(dist, pct))
+    pct = 50 if demand == "DL" else 25
+    t_qos = {name: qos_threshold(cd, name, queries, pct) for name in names}
     # arrival rate from the aggregate distribution (paper §5.1: lambda from
     # the median / 25%-ile of execution times over all configs and workers)
     all_dist = exec_time_distribution(cd, queries)

@@ -1,0 +1,52 @@
+"""SynergAI scoring on the Pallas kernel — a drop-in ``score_fn``.
+
+``make_pallas_score_fn`` builds the dense ``[J, W]`` qps/preproc matrices
+from the Configuration Dictionary (cached rows shared with the numpy
+estimator via ``score_matrices``), runs
+``repro.kernels.scheduler_score`` — interpret mode on CPU, compiled on
+TPU — and adapts the outputs to ``ScoreResult`` so that
+
+    SynergAI(score_fn=make_pallas_score_fn())
+
+is a drop-in replacement for the default numpy path.  Parity (identical
+assignments at fleet scale, padding edges included) is enforced by
+``tests/test_pallas_parity.py`` over profiled catalogues.  One caveat:
+the kernel scores in float32, so a job whose remaining QoS budget ties
+its estimated time to the last float64 bit can flip between acceptable
+and doomed relative to the numpy scorer — real profiles keep orders of
+magnitude more margin than that, but exact boundary ties are not part of
+the guarantee.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.estimator import ScoreResult, score_matrices
+
+
+def make_pallas_score_fn(bj: int = 128, interpret: bool = True):
+    from repro.kernels.scheduler_score import scheduler_score
+
+    def score_fn(cd, jobs, workers, now, use_default=False) -> ScoreResult:
+        t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])
+        if not jobs:
+            z = np.zeros((0, len(workers)))
+            return ScoreResult(list(workers), z, t_rem, z.astype(bool),
+                               np.zeros(0, np.int64), np.zeros(0),
+                               np.zeros(0, bool))
+        qps, pre = score_matrices(cd, jobs, workers, use_default)
+        q = np.array([float(j.queries) for j in jobs], np.float32)
+        est, best, urg, acc = scheduler_score(
+            qps.astype(np.float32), pre.astype(np.float32), q,
+            t_rem.astype(np.float32), bj=bj, interpret=interpret)
+        # BIG-sentinel entries (qps <= 0) become inf so candidate_order's
+        # feasibility filter behaves exactly like the numpy path
+        t_est = np.where(qps > 0, np.asarray(est, np.float64), np.inf)
+        acceptable = np.asarray(acc).astype(bool)
+        return ScoreResult(list(workers), t_est, t_rem, acceptable,
+                           np.asarray(best, np.int64),
+                           np.asarray(urg, np.float64),
+                           ~acceptable.any(axis=1))
+
+    return score_fn

@@ -8,6 +8,14 @@ update (simulator tick) reassesses all waiting jobs.
 
 Unlike every baseline, assignments use the *optimal* per-(engine, worker)
 configuration c*_{j,w} from the offline Configuration Dictionary.
+
+The placement pass is fully vectorized for fleet scale (thousands of queued
+jobs x hundreds of pools): per-job candidate walks become masked argmins
+over a shared cost matrix — provably the same assignment as walking the
+stable-sorted candidate list, since ``argmin`` breaks ties at the lowest
+worker index exactly like a stable sort does.  ``score_fn`` swaps the
+scoring backend: the numpy estimator by default, or the Pallas kernel via
+``repro.core.pallas_scoring.make_pallas_score_fn``.
 """
 
 from __future__ import annotations
@@ -16,7 +24,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.estimator import candidate_order, estimate_matrix
+from repro.core.estimator import estimate_matrix
 from repro.core.simulator import Assignment, Cluster, Policy
 
 
@@ -33,37 +41,58 @@ class SynergAI(Policy):
         if not queue:
             return []
         workers = list(cluster.workers)
+        avail = np.array([cluster.workers[w].idle(now) for w in workers])
+        if not avail.any():
+            # nothing can start this tick; scoring the whole queue would
+            # change no assignment (the placement below only dispatches
+            # onto idle workers), so skip the [J, W] pass — the dominant
+            # cost under fleet-scale backlog.
+            return []
         score = self.score_fn(cluster.cd, queue, workers, now,
                               use_default=False)
         busy_wait = np.array([max(0.0, cluster.workers[w].busy_until - now,
                                   cluster.workers[w].failed_until - now)
                               for w in workers])
-        # order: urgent first (2D Ordered Job Queue); doomed jobs last
-        order = sorted(range(len(queue)),
-                       key=lambda ji: (bool(score.doomed[ji]),
-                                       float(score.urgency[ji])))
+        t = score.t_estimated
+        doomed = score.doomed
+        # order: urgent first (2D Ordered Job Queue); doomed jobs last.
+        # lexsort is stable, so ties keep queue order like sorted() did.
+        order = np.lexsort((score.urgency, doomed))
+        # per-job candidate cost + eligibility (the sorted (w, c*) list):
+        # non-doomed jobs walk their *acceptable* workers by T_estimated;
+        # doomed jobs minimize expected completion (wait + exec) over all
+        # feasible workers, restricted to options within 1.5x of the best
+        # so a doomed job waits for a fast worker instead of seizing a far
+        # slower idle one and blocking it for everyone else.
+        feasible = np.isfinite(t)
+        if doomed.any():
+            cost = np.where(doomed[:, None], t + busy_wait[None, :], t)
+            best_cost = np.where(feasible, cost, np.inf).min(axis=1)
+            elig = np.where(doomed[:, None],
+                            feasible & (t <= 1.5 * best_cost[:, None]),
+                            score.acceptable)
+        else:
+            cost = t
+            elig = score.acceptable
+        ranked = np.where(elig, cost, np.inf)
+        # jobs with no eligible idle worker can never place this round
+        live = np.isfinite(ranked[:, avail]).any(axis=1)
+
         out: List[Assignment] = []
-        taken = set()
-        any_idle = set(cluster.idle_workers(now))
+        open_slots = avail.copy()
+        n_open = int(open_slots.sum())
         for ji in order:
-            job = queue[ji]
-            cands = candidate_order(score, ji, busy_wait)
-            if score.doomed[ji] and cands:
-                # a doomed job minimizes expected completion: it dispatches
-                # to an idle worker only if that is within 1.5x of the best
-                # (wait + exec) option; otherwise it waits for the fast one
-                best_cost = (score.t_estimated[ji][cands[0]]
-                             + busy_wait[cands[0]])
-                cands = [w for w in cands
-                         if score.t_estimated[ji][w] <= 1.5 * best_cost]
-            for wi in cands:
+            if not live[ji]:
+                continue
+            cand = np.where(open_slots, ranked[ji], np.inf)
+            wi = int(cand.argmin())
+            if np.isfinite(cand[wi]):
                 w = workers[wi]
-                if w in taken or w not in any_idle:
-                    continue
-                ent = cluster.cd.optimal(job.engine, w)
-                out.append(Assignment(job, w, ent))
-                taken.add(w)
-                break
-            if len(taken) == len(any_idle):
-                break
+                job = queue[ji]
+                out.append(Assignment(job, w, cluster.cd.optimal(job.engine,
+                                                                 w)))
+                open_slots[wi] = False
+                n_open -= 1
+                if n_open == 0:
+                    break
         return out

@@ -55,6 +55,18 @@ class SloMael(Policy):
         self.worker_fifo.setdefault(best_w, []).append(job.id)
 
     def schedule(self, now, queue, cluster) -> List[Assignment]:
+        # failure recovery: a job killed mid-run is re-queued by the
+        # simulator without a new arrival event, so it sits in no per-worker
+        # FIFO and would never dispatch again — re-commit it as if it had
+        # just arrived (its old backlog entry is a sunk cost the model-based
+        # plan never revisits; that lack of re-observation is the paper's
+        # §5.3 criticism of this baseline).  No-op without failures.
+        committed = set()
+        for fifo in self.worker_fifo.values():
+            committed.update(fifo)
+        for job in queue:
+            if job.id not in committed:
+                self.on_arrival(job, cluster, now)
         out = []
         by_id = {j.id: j for j in queue}
         for w, fifo in self.worker_fifo.items():

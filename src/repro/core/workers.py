@@ -54,5 +54,25 @@ def default_fleet() -> List[WorkerPool]:
     ]
 
 
+def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
+                n_edge_small: int = 1) -> List[WorkerPool]:
+    """Synthetic fleet: replicate the three profiled pool archetypes.
+
+    Replica k > 0 of an archetype is named ``<archetype>__<k+1>`` so it
+    shares the archetype's Configuration Dictionary profile (see
+    ``ConfigDict.optimal``, which strips the ``__`` suffix): a single
+    ``characterize()`` over the 3-pool default fleet drives simulations of
+    any fleet size — e.g. ``synth_fleet(8, 28, 28)`` is a 64-pool cluster.
+    """
+    assert n_cloud + n_edge_large + n_edge_small > 0, "empty fleet"
+    out: List[WorkerPool] = []
+    counts = (n_cloud, n_edge_large, n_edge_small)
+    for pool, n in zip(default_fleet(), counts):
+        for k in range(n):
+            name = pool.name if k == 0 else f"{pool.name}__{k + 1}"
+            out.append(dataclasses.replace(pool, name=name))
+    return out
+
+
 def fleet_by_name(fleet=None) -> Dict[str, WorkerPool]:
     return {w.name: w for w in (fleet or default_fleet())}

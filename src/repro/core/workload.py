@@ -1,0 +1,394 @@
+"""Fleet-scale workload subsystem: composable arrival processes, heavy-tail
+query sizes, multi-tenant mixes, and synthetic failure traces.
+
+The paper's evaluation (§5.1) uses 24-job Poisson experiments on a 3-worker
+testbed — that stays in ``repro.core.job.make_experiment``, the
+paper-fidelity wrapper.  This module generates the large, bursty, diverse
+traces (PerLLM-style: arXiv:2405.14636) that the event-heap simulator and
+the ``synth_fleet`` clusters are built for:
+
+* ``PoissonArrivals``      — homogeneous baseline.
+* ``MMPPArrivals``         — Markov-modulated Poisson: bursty at equal mean
+                             rate (dispersion index > 1).
+* ``DiurnalArrivals``      — sinusoidal non-homogeneous Poisson (thinning).
+* ``FlashCrowdArrivals``   — a spike window at ``spike_factor`` x the base.
+* ``ParetoSize``           — heavy-tail query counts.
+* ``TenantSpec`` + ``make_workload`` — multi-tenant mixes over the engine
+  catalogue with per-tenant QoS tightness.
+* ``scenario``             — named presets used by tests and benchmarks.
+* ``synth_failures``       — Poisson worker failures / exponential repair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.configdict import ConfigDict
+from repro.core.engines import default_engines
+from repro.core.job import DEFAULT_QUERIES, Job, exec_time, qos_threshold
+from repro.core.simulator import FailureEvent
+from repro.core.workers import WorkerPool
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+
+
+class ArrivalProcess:
+    """Generates ``n`` sorted arrival times (seconds) from an rng."""
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def mean_rate(self) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class PoissonArrivals(ArrivalProcess):
+    rate: float                                   # jobs / second
+
+    def sample(self, rng, n):
+        return np.cumsum(rng.exponential(1.0 / self.rate, size=n))
+
+    def mean_rate(self):
+        return self.rate
+
+
+@dataclasses.dataclass
+class MMPPArrivals(ArrivalProcess):
+    """Markov-modulated Poisson process: a continuous-time chain cycles
+    through ``rates`` states with exponential dwell times ``dwell_s``.
+    Exact simulation — the exponential's memorylessness lets us redraw the
+    inter-arrival gap whenever a state switch interrupts it."""
+
+    rates: Sequence[float]
+    dwell_s: Sequence[float]
+
+    def sample(self, rng, n):
+        assert len(self.rates) == len(self.dwell_s) >= 2
+        times = np.empty(n)
+        state, t, i = 0, 0.0, 0
+        switch = t + rng.exponential(self.dwell_s[0])
+        while i < n:
+            gap = rng.exponential(1.0 / self.rates[state])
+            if t + gap >= switch:
+                t = switch
+                state = (state + 1) % len(self.rates)
+                switch = t + rng.exponential(self.dwell_s[state])
+                continue
+            t += gap
+            times[i] = t
+            i += 1
+        return times
+
+    def mean_rate(self):                          # time-weighted
+        r = np.asarray(self.rates, float)
+        d = np.asarray(self.dwell_s, float)
+        return float((r * d).sum() / d.sum())
+
+
+class _ThinnedArrivals(ArrivalProcess):
+    """Non-homogeneous Poisson via Lewis-Shedler thinning."""
+
+    def rate_at(self, t: float) -> float:
+        raise NotImplementedError
+
+    def max_rate(self) -> float:
+        raise NotImplementedError
+
+    def sample(self, rng, n):
+        lam = self.max_rate()
+        times = np.empty(n)
+        t, i = 0.0, 0
+        while i < n:
+            t += rng.exponential(1.0 / lam)
+            if rng.random() * lam <= self.rate_at(t):
+                times[i] = t
+                i += 1
+        return times
+
+
+@dataclasses.dataclass
+class DiurnalArrivals(_ThinnedArrivals):
+    """rate(t) = base * (1 + amplitude * sin(2 pi t / period))."""
+
+    base_rate: float
+    amplitude: float = 0.8                        # in [0, 1)
+    period_s: float = 3600.0
+
+    def rate_at(self, t):
+        return self.base_rate * (
+            1.0 + self.amplitude * np.sin(2.0 * np.pi * t / self.period_s))
+
+    def max_rate(self):
+        return self.base_rate * (1.0 + abs(self.amplitude))
+
+    def mean_rate(self):
+        return self.base_rate
+
+
+@dataclasses.dataclass
+class FlashCrowdArrivals(_ThinnedArrivals):
+    """Baseline Poisson plus a flash-crowd window at ``spike_factor`` x."""
+
+    base_rate: float
+    spike_at: float
+    spike_duration: float
+    spike_factor: float = 8.0
+
+    def rate_at(self, t):
+        in_spike = self.spike_at <= t < self.spike_at + self.spike_duration
+        return self.base_rate * (self.spike_factor if in_spike else 1.0)
+
+    def max_rate(self):
+        return self.base_rate * self.spike_factor
+
+    def mean_rate(self):
+        return self.base_rate                     # spike excluded: lower bound
+
+
+def index_of_dispersion(times: np.ndarray, window_s: float) -> float:
+    """Variance/mean of per-window arrival counts: 1 for Poisson, > 1 for
+    bursty processes.  The standard burstiness sanity metric."""
+    t = np.asarray(times, float)
+    edges = np.arange(0.0, float(t.max()) + window_s, window_s)
+    counts, _ = np.histogram(t, edges)
+    return float(counts.var() / max(counts.mean(), 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# query-size distributions
+
+
+class SizeDistribution:
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class FixedSize(SizeDistribution):
+    queries: int = DEFAULT_QUERIES
+
+    def sample(self, rng, n):
+        return np.full(n, self.queries, dtype=int)
+
+
+@dataclasses.dataclass
+class ParetoSize(SizeDistribution):
+    """Heavy-tail query counts: q = q_min * (1 + Pareto(alpha)), capped."""
+
+    alpha: float = 1.5
+    q_min: int = 200
+    q_max: int = 20_000
+
+    def sample(self, rng, n):
+        q = self.q_min * (1.0 + rng.pareto(self.alpha, size=n))
+        return np.minimum(q, self.q_max).astype(int)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant workloads
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One traffic class: its own arrival process, engine subset (with
+    optional mix weights), size distribution and QoS tightness (percentile
+    per paper §5.1: DL=50, DH=25; ``qos_scale`` loosens/tightens the
+    budget)."""
+
+    name: str
+    arrivals: ArrivalProcess
+    n_jobs: int
+    engines: Optional[Sequence[str]] = None       # None -> whole catalogue
+    engine_weights: Optional[Sequence[float]] = None   # None -> uniform
+    sizes: SizeDistribution = dataclasses.field(default_factory=FixedSize)
+    qos_percentile: float = 50.0
+    qos_scale: float = 1.0
+    start_at: float = 0.0
+
+
+def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
+                  seed: int = 0) -> List[Job]:
+    """Merge all tenants into one arrival-ordered, re-numbered job list."""
+    rng = np.random.default_rng(seed)
+    jobs: List[Job] = []
+    for tenant in tenants:
+        names = list(tenant.engines or default_engines())
+        p = None
+        if tenant.engine_weights is not None:
+            p = np.asarray(tenant.engine_weights, float)
+            p = p / p.sum()
+        arrivals = tenant.start_at + tenant.arrivals.sample(rng,
+                                                            tenant.n_jobs)
+        queries = tenant.sizes.sample(rng, tenant.n_jobs)
+        picks = rng.choice(len(names), size=tenant.n_jobs, p=p)
+        for at, q, ei in zip(arrivals, queries, picks):
+            engine = names[int(ei)]
+            t_qos = tenant.qos_scale * qos_threshold(
+                cd, engine, int(q), tenant.qos_percentile)
+            jobs.append(Job(0, engine, int(q), float(t_qos), float(at)))
+    jobs.sort(key=lambda j: j.arrival)
+    for i, j in enumerate(jobs):
+        j.id = i
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# scenario presets
+
+
+def engine_throughput(cd: ConfigDict, fleet: Sequence[WorkerPool],
+                      engines: Sequence[str],
+                      queries: int = DEFAULT_QUERIES) -> dict:
+    """Fleet-wide peak throughput per engine (jobs/s): each pool serves
+    1/T_exec jobs per second at its optimal configuration."""
+    thr = {}
+    for e in engines:
+        total = 0.0
+        for w in fleet:
+            ent = cd.optimal(e, w.name)
+            if ent is not None and ent.qps > 0:
+                total += 1.0 / exec_time(ent, queries)
+        thr[e] = total
+    return thr
+
+
+def fleet_rate(cd: ConfigDict, fleet: Sequence[WorkerPool],
+               utilization: float = 0.7,
+               engines: Optional[Sequence[str]] = None,
+               weights: Optional[Sequence[float]] = None,
+               queries: int = DEFAULT_QUERIES) -> float:
+    """Arrival rate that drives ``fleet`` to ~``utilization``.
+
+    On a heterogeneous fleet a global median is meaningless: a cloud-only
+    236B engine contributes hours of work per job while a 2B edge engine
+    contributes seconds.  Each engine's offered work is weighed against its
+    *fleet-wide throughput* (sum of 1/T_exec over feasible pools), i.e. the
+    utilization the mix induces under throughput-proportional routing.
+    Defaults to the capacity-proportional mix used by ``scenario``."""
+    engines = list(engines or default_engines())
+    thr = engine_throughput(cd, fleet, engines, queries)
+    if weights is None:
+        weights = [thr[e] for e in engines]       # capacity-proportional
+    for e, w in zip(engines, weights):
+        if w > 0 and thr[e] <= 0:
+            raise ValueError(f"engine {e!r} is infeasible on this fleet")
+    wsum = float(sum(weights))
+    work = sum(w / wsum / thr[e]
+               for e, w in zip(engines, weights) if w > 0)
+    return utilization / work
+
+
+# engines light enough for edge pools vs the heavyweight cloud set — used
+# by the multi-tenant preset to shape per-tenant placement pressure
+EDGE_ENGINES = ("danube-1.8b/bf16", "gemma-2b/bf16", "gemma-2b/int8",
+                "qwen3-4b/int8", "hymba-1.5b/bf16", "rwkv6-1.6b/bf16")
+HEAVY_ENGINES = ("qwen3-32b/bf16", "qwen3-4b/bf16", "phi3.5-moe/bf16",
+                 "deepseek-v2/int8", "llama32-vision/bf16",
+                 "seamless-m4t/bf16")
+
+SCENARIOS = ("poisson", "mmpp", "diurnal", "flash", "multi-tenant")
+
+
+def _mix(cd, fleet, engines):
+    """Capacity-proportional traffic mix over the feasible engine subset:
+    light edge-friendly engines carry most of the traffic, heavyweights
+    proportionally less — a fleet mix whose offered load is well-defined."""
+    thr = engine_throughput(cd, fleet, engines)
+    names = [e for e in engines if thr[e] > 0]
+    assert names, "no engine of the mix is feasible on this fleet"
+    return names, [thr[e] for e in names]
+
+
+def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
+             fleet: Optional[Sequence[WorkerPool]] = None,
+             utilization: float = 0.7, seed: int = 0) -> List[Job]:
+    """Named fleet-scale scenarios over the engine catalogue, calibrated to
+    ``utilization`` of the given fleet (default: the 3-pool paper fleet)."""
+    from repro.core.workers import default_fleet
+    fleet = list(fleet or default_fleet())
+    engines, weights = _mix(cd, fleet, list(default_engines()))
+    r = fleet_rate(cd, fleet, utilization, engines, weights)
+    tenant = dict(engines=engines, engine_weights=weights)
+    if kind == "poisson":
+        tenants = [TenantSpec("all", PoissonArrivals(r), n_jobs, **tenant)]
+    elif kind == "mmpp":
+        # 7:1 burst ratio at the same time-averaged rate as "poisson"
+        tenants = [TenantSpec(
+            "bursty", MMPPArrivals((0.25 * r, 1.75 * r), (240.0, 240.0)),
+            n_jobs, **tenant)]
+    elif kind == "diurnal":
+        period = max(600.0, 0.25 * n_jobs / r)    # a few cycles per trace
+        tenants = [TenantSpec(
+            "diurnal", DiurnalArrivals(r, amplitude=0.8, period_s=period),
+            n_jobs, **tenant)]
+    elif kind == "flash":
+        span = n_jobs / r
+        tenants = [TenantSpec(
+            "flash", FlashCrowdArrivals(0.8 * r, spike_at=span / 3.0,
+                                        spike_duration=span / 20.0,
+                                        spike_factor=8.0), n_jobs,
+            **tenant)]
+    elif kind == "multi-tenant":
+        edge_e, edge_w = _mix(cd, fleet, list(EDGE_ENGINES))
+        heavy_e, heavy_w = _mix(cd, fleet, list(HEAVY_ENGINES))
+        # utilization shares per tenant; job counts follow each tenant's
+        # rate so the three traces overlap in time
+        r_int = fleet_rate(cd, fleet, 0.5 * utilization, edge_e, edge_w)
+        r_batch = fleet_rate(cd, fleet, 0.35 * utilization, heavy_e,
+                             heavy_w)
+        r_launch = fleet_rate(cd, fleet, 0.15 * utilization, edge_e,
+                              edge_w)
+        r_tot = r_int + r_batch + r_launch
+        n_int = int(n_jobs * r_int / r_tot)
+        n_batch = int(n_jobs * r_batch / r_tot)
+        n_launch = n_jobs - n_int - n_batch
+        span = n_jobs / r_tot
+        tenants = [
+            # interactive: small engines, tight QoS, steady traffic
+            TenantSpec("interactive", PoissonArrivals(r_int), n_int,
+                       engines=edge_e, engine_weights=edge_w,
+                       qos_percentile=25.0),
+            # batch: heavy engines, heavy-tail sizes, loose QoS, bursty
+            TenantSpec("batch",
+                       MMPPArrivals((0.4 * r_batch, 1.6 * r_batch),
+                                    (300.0, 300.0)), n_batch,
+                       engines=heavy_e, engine_weights=heavy_w,
+                       sizes=ParetoSize(), qos_percentile=50.0,
+                       qos_scale=3.0),
+            # a product launch: flash crowd on the small engines
+            TenantSpec("launch",
+                       FlashCrowdArrivals(r_launch, spike_at=span / 2.0,
+                                          spike_duration=span / 15.0,
+                                          spike_factor=10.0),
+                       n_launch, engines=edge_e, engine_weights=edge_w,
+                       qos_percentile=50.0),
+        ]
+    else:
+        raise ValueError(f"unknown scenario {kind!r}; one of {SCENARIOS}")
+    return make_workload(cd, tenants, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# failure traces
+
+
+def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
+                   mtbf_s: float, mttr_s: float,
+                   seed: int = 0) -> List[FailureEvent]:
+    """Per-worker Poisson failures with exponential repair times, for
+    fleet-scale robustness runs (the simulator re-queues killed jobs)."""
+    rng = np.random.default_rng(seed)
+    events: List[FailureEvent] = []
+    for w in fleet:
+        t = rng.exponential(mtbf_s)
+        while t < horizon_s:
+            d = rng.exponential(mttr_s)
+            events.append(FailureEvent(w.name, float(t), float(d)))
+            t += d + rng.exponential(mtbf_s)
+    return sorted(events, key=lambda f: f.at)

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or the skip shim
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention

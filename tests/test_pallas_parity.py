@@ -1,0 +1,81 @@
+"""Pallas ``scheduler_score`` vs the numpy ``estimate_matrix`` oracle at
+fleet scale (J~2048, W=256), covering the padding edges (J not divisible by
+``bj``, all-infeasible rows, doomed jobs) — and the drop-in guarantee:
+``SynergAI(score_fn=pallas)`` produces identical assignments."""
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import estimate_matrix
+from repro.core.job import Job
+from repro.core.pallas_scoring import make_pallas_score_fn
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import Simulator
+from repro.core.workers import synth_fleet
+from repro.core.workload import (MMPPArrivals, ParetoSize, TenantSpec,
+                                 make_workload, scenario)
+
+
+def _fleet_queue(cd, n_jobs):
+    """A messy fleet-scale queue: bursty multi-tenant mix, heavy-tail
+    sizes, a slice of doomed jobs (impossible QoS) and a slice of
+    all-infeasible rows (engine unknown to the ConfigDict)."""
+    tenants = [
+        TenantSpec("mix", MMPPArrivals((0.5, 3.0), (120.0, 60.0)),
+                   n_jobs - 64, sizes=ParetoSize()),
+        # doomed: QoS far below anything any worker can deliver
+        TenantSpec("doomed", MMPPArrivals((0.5, 3.0), (120.0, 60.0)), 32,
+                   qos_scale=1e-3),
+    ]
+    jobs = make_workload(cd, tenants, seed=13)
+    # all-infeasible rows: an engine no worker has a profile for
+    for i in range(32):
+        jobs.append(Job(len(jobs), "unknown-engine/bf16", 1000, 60.0,
+                        float(i)))
+    return jobs
+
+
+@pytest.mark.parametrize("J,bj", [(2048, 128), (2043, 128)])
+def test_pallas_matches_numpy_oracle_at_fleet_scale(configdict, J, bj):
+    fleet = synth_fleet(86, 85, 85)
+    workers = [w.name for w in fleet]
+    assert len(workers) == 256
+    jobs = _fleet_queue(configdict, J)[:J]
+    now = float(np.median([j.arrival for j in jobs]))  # t_rem straddles 0
+    s_np = estimate_matrix(configdict, jobs, workers, now)
+    s_pl = make_pallas_score_fn(bj=bj)(configdict, jobs, workers, now)
+    assert (s_np.best_worker == s_pl.best_worker).all()
+    assert (s_np.acceptable == s_pl.acceptable).all()
+    assert (s_np.doomed == s_pl.doomed).all()
+    feas = np.isfinite(s_np.t_estimated)
+    assert (np.isfinite(s_pl.t_estimated) == feas).all()
+    np.testing.assert_allclose(s_pl.t_estimated[feas],
+                               s_np.t_estimated[feas], rtol=1e-5)
+    np.testing.assert_allclose(s_pl.urgency[feas.any(1)],
+                               s_np.urgency[feas.any(1)], rtol=1e-4,
+                               atol=0.5)
+    # the all-infeasible rows really exercised the -1 path
+    assert (s_np.best_worker == -1).any()
+    # and the doomed path
+    assert s_np.doomed.any() and not s_np.doomed.all()
+
+
+def test_synergai_identical_assignments_with_pallas_score_fn(configdict):
+    """Byte-identical schedules: same worker, config and (noise-driven)
+    timings job-for-job on a paper experiment and on a fleet scenario."""
+    from repro.core.job import make_experiment
+
+    def run(score_fn, jobs, **kw):
+        sim = Simulator(configdict, SynergAI(score_fn=score_fn), **kw)
+        return [(r.job.id, r.worker, r.config, r.start, r.end, r.violated)
+                for r in sim.run(jobs)]
+
+    jobs = make_experiment(configdict, "DH", "FH", seed=11)
+    assert run(None, jobs, seed=11) \
+        == run(make_pallas_score_fn(), jobs, seed=11)
+
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "mmpp", n_jobs=120, fleet=fleet,
+                    utilization=0.9, seed=5)
+    assert run(None, jobs, fleet=fleet, seed=5) \
+        == run(make_pallas_score_fn(), jobs, fleet=fleet, seed=5)

@@ -3,8 +3,7 @@ and the paper's headline orderings — plus hypothesis property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import given, settings, st  # hypothesis or the skip shim
 
 from repro.core.baselines import (BestEffort, LeastRecentlyUsed,
                                   MostRecentlyUsed, RoundRobin,

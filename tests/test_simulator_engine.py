@@ -1,0 +1,172 @@
+"""Event-heap simulator engine: exact seed-semantics equivalence against
+the preserved tick-scanning loop, same-seed determinism, conservation
+invariants at fleet scale, and the 10k-job x 64-pool MMPP acceptance run."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import RoundRobin, StrictRoundRobin
+from repro.core.job import make_experiment
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import FailureEvent, Simulator
+from repro.core.simulator_legacy import LegacySimulator
+from repro.core.slo_mael import SloMael
+from repro.core.workers import synth_fleet
+from repro.core.workload import scenario, synth_failures
+
+POLICIES = [RoundRobin, StrictRoundRobin, SloMael, SynergAI]
+
+
+def _key(results):
+    # decision_s is wall-clock (non-deterministic); everything else is
+    # simulated time and must match bit-for-bit
+    return [(r.job.id, r.worker, r.config, r.start, r.end, r.waiting,
+             r.exec_s, r.e2e, r.violated, r.excess, r.overhead_s,
+             r.speculated) for r in results]
+
+
+# ----------------------------------------------------------------------------
+# seed-semantics equivalence (the legacy loop is the oracle)
+
+
+@pytest.mark.parametrize("policy_cls", POLICIES)
+@pytest.mark.parametrize("exp", [("DL", "FL"), ("DL", "FH"), ("DH", "FH")])
+def test_event_heap_matches_seed_semantics(configdict, policy_cls, exp):
+    jobs = make_experiment(configdict, *exp, seed=3)
+    new = Simulator(configdict, policy_cls(), seed=3).run(jobs)
+    old = LegacySimulator(configdict, policy_cls(), seed=3).run(jobs)
+    assert _key(new) == _key(old)
+
+
+def test_event_heap_matches_seed_with_failures_and_speculation(configdict):
+    jobs = make_experiment(configdict, "DL", "FH", seed=2)
+    kw = dict(speculative=True, straggler_prob=0.3, straggler_factor=5.0,
+              failures=[FailureEvent("edge-large", 30.0, 200.0),
+                        FailureEvent("cloud-pod", 80.0, 150.0)], seed=2)
+    new = Simulator(configdict, SynergAI(), **kw).run(jobs)
+    old = LegacySimulator(configdict, SynergAI(), **kw).run(jobs)
+    assert _key(new) == _key(old)
+    assert sorted(r.job.id for r in new) == sorted(j.id for j in jobs)
+
+
+@pytest.mark.parametrize("seed", [7, 22, 31])
+def test_event_heap_matches_seed_speculation_failure_interleavings(
+        configdict, seed):
+    """Regression: a failure that kills a *speculated* job invalidates its
+    completion wake, but the original worker still frees at the backup's
+    finish time — the heap must index that wake independently (seed 22
+    exercised the divergent interleaving)."""
+    rng = np.random.default_rng(seed)
+    failures = [FailureEvent(w, float(rng.uniform(10, 300)),
+                             float(rng.uniform(30, 200)))
+                for w in ("cloud-pod", "edge-large", "edge-small")]
+    jobs = make_experiment(configdict, "DH", "FH", seed=seed)
+    kw = dict(speculative=True, straggler_prob=0.4, straggler_factor=6.0,
+              failures=failures, seed=seed)
+    new = Simulator(configdict, SynergAI(), **kw).run(jobs)
+    old = LegacySimulator(configdict, SynergAI(), **kw).run(jobs)
+    assert _key(new) == _key(old)
+
+
+def test_event_heap_matches_seed_with_elastic_scaling(configdict):
+    jobs = make_experiment(configdict, "DH", "FH", seed=4, intensity=12.0)
+    kw = dict(elastic_max=3, elastic_threshold=4, seed=4)
+    new = Simulator(configdict, SynergAI(), **kw).run(jobs)
+    old = LegacySimulator(configdict, SynergAI(), **kw).run(jobs)
+    assert _key(new) == _key(old)
+
+
+def test_event_heap_matches_seed_on_synth_fleet(configdict):
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "mmpp", n_jobs=300, fleet=fleet,
+                    seed=5)
+    failures = synth_failures(fleet, jobs[-1].arrival, mtbf_s=600.0,
+                              mttr_s=60.0, seed=5)
+    for P in (SynergAI, RoundRobin):
+        new = Simulator(configdict, P(), fleet=fleet, failures=failures,
+                        seed=5).run(jobs)
+        old = LegacySimulator(configdict, P(), fleet=fleet,
+                              failures=failures, seed=5).run(jobs)
+        assert _key(new) == _key(old), P.name
+
+
+# ----------------------------------------------------------------------------
+# determinism
+
+
+def test_same_seed_same_results(configdict):
+    fleet = synth_fleet(2, 2, 2)
+    jobs = scenario(configdict, "multi-tenant", n_jobs=400,
+                    fleet=fleet, seed=7)
+    a = Simulator(configdict, SynergAI(), fleet=fleet, seed=7).run(jobs)
+    b = Simulator(configdict, SynergAI(), fleet=fleet, seed=7).run(jobs)
+    assert _key(a) == _key(b)
+
+
+def test_different_seed_different_noise(configdict):
+    jobs = make_experiment(configdict, "DL", "FL", seed=1)
+    a = Simulator(configdict, SynergAI(), seed=1).run(jobs)
+    b = Simulator(configdict, SynergAI(), seed=2).run(jobs)
+    assert _key(a) != _key(b)   # exec noise differs -> schedules differ
+    assert sorted(r.job.id for r in a) == sorted(r.job.id for r in b)
+
+
+# ----------------------------------------------------------------------------
+# conservation invariants at fleet scale
+
+
+def test_fleet_scale_conservation(configdict):
+    """Every job completes exactly once; no worker is double-booked."""
+    fleet = synth_fleet(4, 6, 6)
+    jobs = scenario(configdict, "mmpp", n_jobs=2000, fleet=fleet,
+                    utilization=0.8, seed=1)
+    res = Simulator(configdict, SynergAI(), fleet=fleet, seed=1).run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    by_worker = {}
+    for r in res:
+        assert r.start >= r.job.arrival - 1e-9
+        assert np.isclose(r.e2e, r.end - r.job.arrival)
+        assert r.exec_s > 0 and r.excess >= 0
+        by_worker.setdefault(r.worker, []).append((r.start, r.end))
+    for w, spans in by_worker.items():
+        spans.sort()
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert s2 >= e1 - 1e-6, f"double-booked {w}"
+
+
+def test_fleet_failures_requeue_and_complete(configdict):
+    fleet = synth_fleet(2, 4, 4)
+    jobs = scenario(configdict, "flash", n_jobs=600, fleet=fleet,
+                    seed=3)
+    failures = synth_failures(fleet, jobs[-1].arrival, mtbf_s=400.0,
+                              mttr_s=80.0, seed=3)
+    assert failures, "trace should contain failures"
+    res = Simulator(configdict, SynergAI(), fleet=fleet, failures=failures,
+                    seed=3).run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    # every surviving record either completed before its worker's failure
+    # or started after the recovery — anything else was killed and re-run
+    for r in res:
+        for f in failures:
+            if f.worker == r.worker:
+                assert (r.end <= f.at + 1e-6
+                        or r.start >= f.at + f.duration - 1e-6), (r, f)
+
+
+@pytest.mark.slow
+def test_10k_by_64_pool_mmpp_all_policies(configdict):
+    """Acceptance: the 10k-job, 64-pool MMPP scenario runs end-to-end under
+    SynergAI and all baselines without the livelock guard tripping."""
+    from repro.core.baselines import (BestEffort, LeastRecentlyUsed,
+                                      MostRecentlyUsed)
+    fleet = synth_fleet(8, 28, 28)
+    assert len(fleet) == 64
+    jobs = scenario(configdict, "mmpp", n_jobs=10_000, fleet=fleet,
+                    utilization=0.8, seed=0)
+    viol = {}
+    for P in [RoundRobin, StrictRoundRobin, LeastRecentlyUsed,
+              MostRecentlyUsed, BestEffort, SloMael, SynergAI]:
+        res = Simulator(configdict, P(), fleet=fleet, seed=0).run(jobs)
+        assert len(res) == 10_000, P.name
+        viol[P.name] = sum(r.violated for r in res)
+    assert viol["SynergAI"] <= min(viol.values())

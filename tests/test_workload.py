@@ -1,0 +1,165 @@
+"""Workload subsystem: arrival-process statistics (MMPP burstier than
+Poisson at equal mean rate), heavy-tail sizes, QoS derivation, multi-tenant
+merging, synthetic fleets and failure traces."""
+
+import numpy as np
+import pytest
+
+from repro.core.job import make_experiment, qos_threshold
+from repro.core.workers import default_fleet, synth_fleet
+from repro.core.workload import (SCENARIOS, DiurnalArrivals,
+                                 FlashCrowdArrivals, FixedSize,
+                                 MMPPArrivals, ParetoSize, PoissonArrivals,
+                                 TenantSpec, index_of_dispersion,
+                                 make_workload, scenario, synth_failures)
+
+
+# ----------------------------------------------------------------------------
+# arrival processes
+
+
+def test_poisson_mean_rate():
+    rng = np.random.default_rng(0)
+    times = PoissonArrivals(2.0).sample(rng, 20_000)
+    assert np.isclose(len(times) / times[-1], 2.0, rtol=0.05)
+    assert (np.diff(times) >= 0).all()
+
+
+def test_mmpp_burstier_than_poisson_at_equal_mean_rate():
+    """The tentpole's point: scheduler quality only differentiates under
+    bursty arrivals — MMPP must have dispersion >> Poisson at the same
+    time-averaged rate."""
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(2)
+    r = 2.0
+    mmpp = MMPPArrivals((0.25 * r, 1.75 * r), (120.0, 120.0))
+    assert np.isclose(mmpp.mean_rate(), r)
+    t_mmpp = mmpp.sample(rng1, 20_000)
+    t_poi = PoissonArrivals(r).sample(rng2, 20_000)
+    # realized rates agree ...
+    assert np.isclose(len(t_mmpp) / t_mmpp[-1], len(t_poi) / t_poi[-1],
+                      rtol=0.1)
+    # ... but the burstiness does not
+    d_mmpp = index_of_dispersion(t_mmpp, 60.0)
+    d_poi = index_of_dispersion(t_poi, 60.0)
+    assert d_poi < 2.0          # Poisson: dispersion ~ 1
+    assert d_mmpp > 3.0 * d_poi
+
+
+def test_diurnal_peak_vs_trough():
+    proc = DiurnalArrivals(base_rate=2.0, amplitude=0.8, period_s=1000.0)
+    times = proc.sample(np.random.default_rng(3), 30_000)
+    phase = (times % 1000.0) / 1000.0
+    peak = ((phase > 0.15) & (phase < 0.35)).sum()     # sin ~ +1
+    trough = ((phase > 0.65) & (phase < 0.85)).sum()   # sin ~ -1
+    assert peak > 3 * trough
+
+
+def test_flash_crowd_spike_window():
+    proc = FlashCrowdArrivals(base_rate=1.0, spike_at=500.0,
+                              spike_duration=100.0, spike_factor=10.0)
+    times = proc.sample(np.random.default_rng(4), 10_000)
+    in_spike = ((times >= 500.0) & (times < 600.0)).sum()
+    before = ((times >= 300.0) & (times < 400.0)).sum()
+    assert in_spike > 5 * before
+
+
+def test_pareto_sizes_heavy_tail():
+    sizes = ParetoSize(alpha=1.5, q_min=200, q_max=20_000).sample(
+        np.random.default_rng(5), 20_000)
+    assert sizes.min() >= 200 and sizes.max() <= 20_000
+    assert sizes.max() > 10 * np.median(sizes)
+    assert FixedSize(1000).sample(np.random.default_rng(0), 5).tolist() \
+        == [1000] * 5
+
+
+# ----------------------------------------------------------------------------
+# QoS derivation
+
+
+def test_qos_threshold_monotone_in_queries(configdict):
+    t1 = qos_threshold(configdict, "gemma-2b/bf16", 500, 50)
+    t2 = qos_threshold(configdict, "gemma-2b/bf16", 2000, 50)
+    assert t2 > t1
+
+
+def test_qos_dh_tighter_than_dl(configdict):
+    dl = qos_threshold(configdict, "qwen3-4b/bf16", 1000, 50)
+    dh = qos_threshold(configdict, "qwen3-4b/bf16", 1000, 25)
+    assert dh < dl
+
+
+# ----------------------------------------------------------------------------
+# workload assembly
+
+
+def test_make_workload_merges_tenants_sorted_and_renumbered(configdict):
+    tenants = [
+        TenantSpec("a", PoissonArrivals(1.0), 50,
+                   engines=("gemma-2b/bf16",)),
+        TenantSpec("b", PoissonArrivals(2.0), 70,
+                   engines=("qwen3-4b/bf16",), sizes=ParetoSize(),
+                   qos_percentile=25.0, qos_scale=2.0),
+    ]
+    jobs = make_workload(configdict, tenants, seed=0)
+    assert len(jobs) == 120
+    assert [j.id for j in jobs] == list(range(120))
+    assert all(a.arrival <= b.arrival for a, b in zip(jobs, jobs[1:]))
+    assert {j.engine for j in jobs} == {"gemma-2b/bf16", "qwen3-4b/bf16"}
+
+
+def test_workload_same_seed_deterministic(configdict):
+    fleet = synth_fleet(2, 3, 3)
+    a = scenario(configdict, "multi-tenant", n_jobs=300, fleet=fleet,
+                 seed=9)
+    b = scenario(configdict, "multi-tenant", n_jobs=300, fleet=fleet,
+                 seed=9)
+    assert [(j.engine, j.queries, j.t_qos, j.arrival) for j in a] \
+        == [(j.engine, j.queries, j.t_qos, j.arrival) for j in b]
+
+
+@pytest.mark.parametrize("kind", SCENARIOS)
+def test_every_scenario_generates(configdict, kind):
+    jobs = scenario(configdict, kind, n_jobs=200,
+                    fleet=synth_fleet(2, 3, 3), seed=1)
+    assert len(jobs) == 200
+    assert all(j.t_qos > 0 and j.queries > 0 for j in jobs)
+
+
+def test_unknown_scenario_raises(configdict):
+    with pytest.raises(ValueError):
+        scenario(configdict, "nope", n_jobs=10)
+
+
+def test_make_experiment_still_paper_shaped(configdict):
+    jobs = make_experiment(configdict, "DL", "FH", seed=1)
+    assert len(jobs) == 24
+    assert [j.id for j in jobs] == list(range(24))
+    assert jobs[0].arrival == 0.0
+
+
+# ----------------------------------------------------------------------------
+# fleets + failures
+
+
+def test_synth_fleet_shares_archetype_profiles(configdict):
+    fleet = synth_fleet(2, 3, 4)
+    assert len(fleet) == 9
+    names = [w.name for w in fleet]
+    assert len(set(names)) == 9
+    base = {w.name for w in default_fleet()}
+    for w in fleet:
+        assert w.name.split("__")[0] in base
+        # replicas resolve to the archetype's profile
+        ent = configdict.optimal("gemma-2b/bf16", w.name)
+        ref = configdict.optimal("gemma-2b/bf16", w.name.split("__")[0])
+        assert ent is ref
+
+
+def test_synth_failures_within_horizon_sorted():
+    fleet = synth_fleet(1, 2, 2)
+    evs = synth_failures(fleet, horizon_s=5000.0, mtbf_s=1000.0,
+                         mttr_s=100.0, seed=0)
+    assert evs
+    assert all(0 <= e.at < 5000.0 and e.duration > 0 for e in evs)
+    assert all(a.at <= b.at for a, b in zip(evs, evs[1:]))
+    assert {e.worker for e in evs} <= {w.name for w in fleet}
