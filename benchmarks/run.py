@@ -9,16 +9,31 @@ Prints ``name,...`` CSV lines.  Sections:
   energy               (Fig. 12)
   kernel               (Pallas kernel microbenches)
   roofline             (dry-run derived; §Roofline in EXPERIMENTS.md)
+
+Fleet-scale entry points (not run here; each has its own CLI):
+  benchmarks/scheduler_experiments.py   10k-job x 64-pool scenarios under
+      every policy, old-vs-new simulator wall clock, numpy-vs-Pallas
+      scoring, and the job-level vs batched serving-bridge comparison
+      (--jobs/--pools/--kind, --skip-* flags)
+  examples/fleet_scale.py               64-pool demo over all five
+      scenario presets (--serving {job,batched} selects the service
+      model; scenario(..., serving="batched") token-level requests)
+  examples/serve_bridge.py              serving-bridge demo with
+      per-pool batch stats (docs/serving_bridge.md)
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 
 
 def main() -> None:
+    argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter).parse_args()
     t0 = time.time()
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from repro.core.offline import characterize

@@ -7,8 +7,13 @@ fleet-scale benches:
   head-to-head (seed tick-scanning loop vs indexed event heap).
 * ``bench_scoring`` — numpy ``estimate_matrix`` vs the Pallas
   ``scheduler_score`` kernel at J~2048 x W=256.
+* ``bench_serving`` — job-level vs batched (serving bridge) QoS and
+  wall-clock on an overloaded MMPP fleet scenario: the same trace served
+  with exclusive job occupancy vs continuous batching
+  (``serving="batched"``).
 
 Run standalone:  PYTHONPATH=src python benchmarks/scheduler_experiments.py
+(see --help for the fleet/scoring/serving knobs)
 """
 
 from __future__ import annotations
@@ -172,16 +177,60 @@ def bench_scoring(cd=None, J=2048, pools=(86, 85, 85), iters=5, emit=print):
     return walls
 
 
+def bench_serving(cd=None, n_jobs=2000, pools=(2, 5, 5),
+                  utilization=1.3, kind="mmpp", emit=print):
+    """Job-level vs batched serving on the same overloaded fleet scenario:
+    what the scheduler gains once it can see continuous batching (the
+    dominant real-world throughput lever; see docs/serving_bridge.md)."""
+    from repro.core.simulator import Simulator
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario
+
+    cd = cd or characterize()
+    fleet = synth_fleet(*pools)
+    out = {}
+    for serving in ("job", "batched"):
+        jobs = scenario(cd, kind, n_jobs=n_jobs, fleet=fleet,
+                        utilization=utilization, seed=0, serving=serving)
+        for P in (SynergAI, SloMael, RoundRobin):
+            t0 = time.perf_counter()
+            res = Simulator(cd, P(), fleet=fleet, seed=0,
+                            serving=serving).run(jobs)
+            dt = time.perf_counter() - t0
+            s = summarize(res)
+            out[(serving, P.name)] = s
+            emit(f"serving,{kind},{serving},{P.name},"
+                 f"violations={s['violations']},"
+                 f"wait_s={s['waiting_avg_s']:.1f},"
+                 f"p99_s={s['e2e_p99_s']:.1f},wall_s={dt:.2f}")
+    v_job = out[("job", "SynergAI")]["violations"]
+    v_bat = out[("batched", "SynergAI")]["violations"]
+    emit(f"serving_headline,SynergAI,job_over_batched_violations="
+         f"{v_job / max(1, v_bat):.2f}x,"
+         f"p99_job_s={out[('job', 'SynergAI')]['e2e_p99_s']:.1f},"
+         f"p99_batched_s={out[('batched', 'SynergAI')]['e2e_p99_s']:.1f}")
+    return out
+
+
 def main(argv=None):
     import argparse
-    p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--jobs", type=int, default=10_000)
+    p = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--jobs", type=int, default=10_000,
+                   help="fleet-scale trace length (bench_fleet)")
     p.add_argument("--pools", type=int, nargs=3, default=(8, 28, 28),
-                   metavar=("CLOUD", "EDGE_LG", "EDGE_SM"))
-    p.add_argument("--kind", default="mmpp")
+                   metavar=("CLOUD", "EDGE_LG", "EDGE_SM"),
+                   help="synth_fleet replica counts per archetype")
+    p.add_argument("--kind", default="mmpp",
+                   help="scenario preset: poisson | mmpp | diurnal | "
+                        "flash | multi-tenant")
     p.add_argument("--skip-paper", action="store_true",
                    help="skip the 24-job paper experiments")
     p.add_argument("--skip-scoring", action="store_true")
+    p.add_argument("--skip-serving", action="store_true",
+                   help="skip the job-level vs batched serving-bridge "
+                        "comparison (scenario(..., serving='batched'))")
     args = p.parse_args(argv)
     cd = characterize()
     if not args.skip_paper:
@@ -190,6 +239,9 @@ def main(argv=None):
     if not args.skip_scoring:
         print("# scoring: numpy vs Pallas kernel")
         bench_scoring(cd)
+    if not args.skip_serving:
+        print("# serving bridge: job-level vs batched (mmpp overload)")
+        bench_serving(cd)
     print(f"# fleet scale ({args.kind})")
     bench_fleet(cd, n_jobs=args.jobs, pools=tuple(args.pools),
                 kind=args.kind)

@@ -1,9 +1,11 @@
 """Fleet-scale scenario demo: a 64-pool synthetic cluster serving bursty,
 diurnal and multi-tenant traffic with worker failures, scheduled by
 SynergAI on the event-heap simulator — optionally scored by the Pallas
-kernel.
+kernel, optionally served through the continuous-batching serving bridge
+(--serving batched; see docs/serving_bridge.md).
 
     PYTHONPATH=src python examples/fleet_scale.py [--jobs 2000] [--pallas]
+    PYTHONPATH=src python examples/fleet_scale.py --serving batched
 """
 
 import argparse
@@ -21,6 +23,15 @@ parser = argparse.ArgumentParser()
 parser.add_argument("--jobs", type=int, default=2000)
 parser.add_argument("--pools", type=int, nargs=3, default=(8, 28, 28),
                     metavar=("CLOUD", "EDGE_LG", "EDGE_SM"))
+parser.add_argument("--serving", choices=("job", "batched"),
+                    default="job",
+                    help="service model: exclusive job-level occupancy "
+                         "(paper §5.1) or the continuous-batching serving "
+                         "bridge (token-level requests, KV-bounded "
+                         "batches)")
+parser.add_argument("--max-batch", type=int, default=8,
+                    help="continuous-batch slot budget per worker "
+                         "(batched serving only)")
 parser.add_argument("--pallas", action="store_true",
                     help="score with the Pallas kernel; interpret mode "
                          "emulates the TPU op-by-op on CPU, so keep "
@@ -40,14 +51,15 @@ if args.pallas:
 
 for kind in SCENARIOS:
     jobs = scenario(cd, kind, n_jobs=args.jobs, fleet=fleet,
-                    seed=0)
+                    seed=0, serving=args.serving)
     span = jobs[-1].arrival
     disp = index_of_dispersion([j.arrival for j in jobs], 60.0)
     failures = synth_failures(fleet, span, mtbf_s=2 * span, mttr_s=120.0,
                               seed=0)
     t0 = time.perf_counter()
     res = Simulator(cd, SynergAI(score_fn=score_fn), fleet=fleet,
-                    failures=failures, seed=0).run(jobs)
+                    failures=failures, seed=0, serving=args.serving,
+                    max_batch=args.max_batch).run(jobs)
     dt = time.perf_counter() - t0
     s = summarize(res)
     print(f"{kind:13s} span={span:7.0f}s dispersion={disp:6.1f} "

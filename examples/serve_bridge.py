@@ -1,0 +1,74 @@
+"""Serving-bridge demo: the same bursty trace served job-level vs through
+continuous batching (``serving="batched"``), with per-pool batch stats.
+
+The bridge gives the scheduler eyes on batching — the dominant real-world
+throughput lever: token-level requests (Pareto-sampled prompt/decode
+counts), same-engine batch formation under slot + KV-cache-byte budgets,
+and queue-depth-adjusted latency estimates.  Under load, batched serving
+drains the backlog several times faster at far fewer QoS violations.
+Design note: docs/serving_bridge.md.
+
+    PYTHONPATH=src python examples/serve_bridge.py [--jobs 1500]
+        [--kind mmpp] [--utilization 1.3] [--max-batch 8]
+"""
+
+import argparse
+import time
+
+from repro.core.metrics import summarize
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.serving_bridge import batch_stats
+from repro.core.simulator import Simulator
+from repro.core.workers import synth_fleet
+from repro.core.workload import SCENARIOS, scenario
+
+parser = argparse.ArgumentParser(
+    description=__doc__,
+    formatter_class=argparse.RawDescriptionHelpFormatter)
+parser.add_argument("--jobs", type=int, default=1500)
+parser.add_argument("--pools", type=int, nargs=3, default=(2, 5, 5),
+                    metavar=("CLOUD", "EDGE_LG", "EDGE_SM"))
+parser.add_argument("--kind", choices=SCENARIOS, default="mmpp")
+parser.add_argument("--utilization", type=float, default=1.3,
+                    help="offered load vs job-level fleet capacity; >1 "
+                         "overloads exclusive serving, which batching "
+                         "absorbs")
+parser.add_argument("--max-batch", type=int, default=8,
+                    help="continuous-batch slot budget per worker")
+args = parser.parse_args()
+
+cd = characterize()
+fleet = synth_fleet(*args.pools)
+print(f"fleet: {len(fleet)} pools; {args.kind} x {args.jobs} jobs at "
+      f"{args.utilization:.1f}x job-level capacity\n")
+
+rows = {}
+for serving in ("job", "batched"):
+    jobs = scenario(cd, args.kind, n_jobs=args.jobs, fleet=fleet,
+                    utilization=args.utilization, seed=0, serving=serving)
+    sim = Simulator(cd, SynergAI(), fleet=fleet, seed=0, serving=serving,
+                    max_batch=args.max_batch)
+    t0 = time.perf_counter()
+    res = sim.run(jobs)
+    wall = time.perf_counter() - t0
+    s = summarize(res)
+    rows[serving] = s
+    print(f"{serving:8s} violations={s['violations']:5d} "
+          f"wait={s['waiting_avg_s']:7.1f}s p99={s['e2e_p99_s']:7.1f}s "
+          f"makespan={max(r.end for r in res):7.0f}s wall={wall:5.2f}s")
+    if serving == "batched":
+        st = batch_stats(sim.cluster)
+        top = sorted(st.items(), key=lambda kv: -kv[1]["decoded_tokens"])
+        print("\nbusiest batched pools:")
+        for name, v in top[:5]:
+            print(f"  {name:16s} admitted={v['admitted']:5d} "
+                  f"peak_batch={v['peak_batch']:2d} "
+                  f"prefill_tok={v['prefill_tokens'] / 1e6:7.1f}M "
+                  f"decode_tok={v['decoded_tokens'] / 1e6:7.1f}M")
+
+v_job, v_bat = rows["job"]["violations"], rows["batched"]["violations"]
+print(f"\nheadline: batching cuts QoS violations "
+      f"{v_job / max(1, v_bat):.1f}x "
+      f"(p99 {rows['job']['e2e_p99_s']:.0f}s -> "
+      f"{rows['batched']['e2e_p99_s']:.0f}s)")

@@ -3,6 +3,10 @@
 All baselines use each device's *default configuration* regardless of job
 requirements (paper §5.4: "these schedulers utilize the default
 configuration of each device").
+
+Dispatch goes through ``Cluster.admit_ok`` — plain idleness in job mode,
+plus the serving bridge's batch-formation rules (same-engine batches under
+slot/KV budgets) when the simulator runs with ``serving="batched"``.
 """
 
 from __future__ import annotations
@@ -34,7 +38,7 @@ class RoundRobin(Policy):
             placed = False
             for off in range(len(names)):
                 w = names[(self.ptr + off) % len(names)]
-                if w in taken or not cluster.workers[w].idle(now):
+                if w in taken or not cluster.admit_ok(job, w, now):
                     continue
                 ent = _entry(cluster, job.engine, w)
                 if ent is None:
@@ -69,8 +73,7 @@ class StrictRoundRobin(Policy):
                 break
             self.ptr += 1
         w = names[self.ptr % len(names)]
-        ws = cluster.workers[w]
-        if not ws.idle(now):
+        if not cluster.admit_ok(job, w, now):
             return []  # strict: wait for this specific worker
         ent = _entry(cluster, job.engine, w)
         self.ptr += 1
@@ -86,6 +89,7 @@ class LeastRecentlyUsed(Policy):
             idle = [(cluster.workers[w].last_freed, w)
                     for w in cluster.idle_workers(now)
                     if w not in taken
+                    and cluster.admit_ok(job, w, now)
                     and _entry(cluster, job.engine, w) is not None]
             if not idle:
                 break
@@ -104,6 +108,7 @@ class MostRecentlyUsed(Policy):
             idle = [(cluster.workers[w].last_freed, w)
                     for w in cluster.idle_workers(now)
                     if w not in taken
+                    and cluster.admit_ok(job, w, now)
                     and _entry(cluster, job.engine, w) is not None]
             if not idle:
                 break
@@ -127,7 +132,7 @@ class BestEffort(Policy):
         for job in list(queue):
             placed = False
             for w in strength:
-                if w in taken or not cluster.workers[w].idle(now):
+                if w in taken or not cluster.admit_ok(job, w, now):
                     continue
                 ent = _entry(cluster, job.engine, w)
                 if ent is None:

@@ -22,6 +22,11 @@ class Entry:
     power_w: float
     energy_per_query_j: float
     bottleneck: str
+    # fraction of query_time_s spent in the per-token decode phase (vs the
+    # prefill phase) — the serving bridge splits exec_time into token rates
+    # with it.  Defaulted so ConfigDicts serialized before the field existed
+    # still load.
+    decode_frac: float = 0.85
 
 
 class ConfigDict:

@@ -19,6 +19,19 @@ from repro.core.engines import EngineSpec, default_engines
 DEFAULT_QUERIES = 1000
 
 
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """Token-level view of a job's traffic, used by the batched serving
+    bridge (``repro.core.serving_bridge``): total prompt tokens to prefill
+    and total tokens to decode across all of the job's queries.  Jobs
+    without a ``Request`` fall back to the engine's profiled per-query
+    shape, which makes the token-level service time identical to the
+    job-level ``exec_time``."""
+
+    prompt_tokens: int
+    decode_tokens: int
+
+
 @dataclasses.dataclass
 class Job:
     id: int
@@ -26,6 +39,7 @@ class Job:
     queries: int
     t_qos: float                  # allowed seconds from submission
     arrival: float                # submission time
+    request: Optional[Request] = None   # token counts (batched serving)
 
 
 def exec_time(entry, queries: int) -> float:

@@ -108,6 +108,7 @@ class PerfEstimate:
     energy_per_query_j: float
     feasible: bool
     bottleneck: str
+    decode_frac: float = 0.85     # share of query_time_s in per-token decode
 
 
 def estimate(engine: EngineSpec, worker: WorkerPool,
@@ -148,17 +149,19 @@ def estimate(engine: EngineSpec, worker: WorkerPool,
     t_prefill, dom_p = phase(prof.prefill_flops, prof.prefill_bytes)
     t_dec_step, dom_d = phase(prof.decode_flops_per_step,
                               prof.decode_bytes_per_step)
-    query_time = t_prefill + prof.n_steps * t_dec_step
+    t_decode = prof.n_steps * t_dec_step
+    query_time = t_prefill + t_decode
     qps = prof.microbatch / query_time
+    decode_frac = t_decode / query_time
 
     preproc = (ENGINE_INIT_S + prof.weights_bytes / MODEL_LOAD_GBPS
                + HOST_TOKENIZE_S_PER_MB
                * (prof.microbatch * engine.prefill_len * 4 / 1e6))
     power = mode.power_w()
     energy = power * query_time / prof.microbatch
-    bottleneck = dom_d if prof.n_steps * t_dec_step > t_prefill else dom_p
+    bottleneck = dom_d if t_decode > t_prefill else dom_p
     return PerfEstimate(qps, query_time, preproc, power, energy, True,
-                        bottleneck)
+                        bottleneck, decode_frac)
 
 
 def config_space(engine: EngineSpec, worker: WorkerPool):

@@ -16,6 +16,14 @@ stable-sorted candidate list, since ``argmin`` breaks ties at the lowest
 worker index exactly like a stable sort does.  ``score_fn`` swaps the
 scoring backend: the numpy estimator by default, or the Pallas kernel via
 ``repro.core.pallas_scoring.make_pallas_score_fn``.
+
+Under the batched serving bridge (``Simulator(..., serving="batched")``)
+the estimates become *queue-depth-aware*: every worker's column is scaled
+by ``Cluster.depth_penalty`` (joining a batch of ``b`` members runs
+``1 + alpha * b`` slower than solo), acceptability and doom are
+re-derived from the adjusted times, and eligibility is intersected with
+the bridge's batch-formation rules (same-engine batches under slot/KV
+budgets) via ``Cluster.admit_engine_ok``.
 """
 
 from __future__ import annotations
@@ -55,6 +63,19 @@ class SynergAI(Policy):
                               for w in workers])
         t = score.t_estimated
         doomed = score.doomed
+        acceptable = score.acceptable
+        batched = getattr(cluster, "serving", "job") == "batched"
+        if batched:
+            # queue-depth-adjusted latency: joining a live batch divides
+            # the job's service rate; re-derive Eq. 3/4 from the
+            # penalized estimates (identical to the plain path whenever
+            # every batch is empty, e.g. max_batch=1 with free workers)
+            pen = np.array([cluster.depth_penalty(w, now)
+                            for w in workers])
+            if (pen != 1.0).any():
+                t = t * pen[None, :]
+                acceptable = score.t_remaining[:, None] >= t
+                doomed = ~acceptable.any(axis=1)
         # order: urgent first (2D Ordered Job Queue); doomed jobs last.
         # lexsort is stable, so ties keep queue order like sorted() did.
         order = np.lexsort((score.urgency, doomed))
@@ -70,10 +91,18 @@ class SynergAI(Policy):
             best_cost = np.where(feasible, cost, np.inf).min(axis=1)
             elig = np.where(doomed[:, None],
                             feasible & (t <= 1.5 * best_cost[:, None]),
-                            score.acceptable)
+                            acceptable)
         else:
             cost = t
-            elig = score.acceptable
+            elig = acceptable
+        if batched:
+            # batch-formation rules: a live batch only admits its own
+            # engine, under the slot and KV-cache budgets
+            emask = {e: np.fromiter((cluster.admit_engine_ok(e, w, now)
+                                     for w in workers), dtype=bool,
+                                    count=len(workers))
+                     for e in {j.engine for j in queue}}
+            elig = elig & np.stack([emask[j.engine] for j in queue])
         ranked = np.where(elig, cost, np.inf)
         # jobs with no eligible idle worker can never place this round
         live = np.isfinite(ranked[:, avail]).any(axis=1)

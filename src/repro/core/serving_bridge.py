@@ -1,0 +1,170 @@
+"""Batch/queue-aware serving bridge: continuous batching inside the
+cluster simulator.
+
+The job-level simulator treats a job as an opaque duration — ``exec_time``
+seconds of exclusive worker occupancy.  Real inference engines
+(``repro.serving.engine.InferenceEngine``) serve *batched* traffic: a
+prefill pass admits a request into the running batch, per-token decode
+steps serve every batch member together, and the batch is bounded by the
+KV-cache bytes that fit next to the weights.  This module is the bridge
+between the two: a token-level request model plus the profile math behind
+``repro.core.simulator.BatchedWorkerSim``, the continuous-batching service
+model selected with ``Simulator(..., serving="batched")``.
+
+Model (see ``docs/serving_bridge.md`` for the full design note):
+
+* **Requests** — ``repro.core.job.Request`` carries a job's total prompt
+  and decode token counts.  ``repro.core.workload.attach_requests``
+  Pareto-samples them around each engine's profiled per-query shape.
+* **Rates from the ConfigDict** — each ``Entry`` stores ``qps`` and
+  ``decode_frac`` (share of query time spent in per-token decode), so the
+  solo token rates are ``prefill_rate = prefill_len * qps / (1 - df)`` and
+  ``decode_rate = decode_len * qps / df``.  A job with the engine-default
+  token counts therefore takes exactly ``exec_time(entry, queries)``
+  seconds when served alone — job-level and token-level modes agree at
+  batch size 1.
+* **Continuous batching** — a batch of ``b`` same-engine jobs drains each
+  member at multiplier ``m(b) = 1 / (1 + alpha * (b - 1))`` of its solo
+  rate, i.e. aggregate throughput ``b * m(b)`` grows sublinearly with
+  ``alpha`` taken from the entry's profiled bottleneck (memory-bound
+  decode batches almost for free; compute-bound engines pay more).
+* **Batch formation** — a worker admits a job iff the batch is empty or
+  (same engine) and (``len(batch) < max_batch``) and one more microbatch
+  KV cache fits: ``kv_limit = floor((hbm / 1.2 - weights) / kv_bytes)``,
+  the analytic counterpart of ``InferenceEngine.cache_footprint`` built
+  from ``repro.core.perfmodel.profile_engine``.
+
+The simulator re-estimates every member's completion on each batch change
+and feeds the new times through the event heap; schedulers see the batch
+through ``Cluster.depth_penalty`` (queue-depth-adjusted latency,
+``1 + alpha * b`` for joining a batch of ``b``) and ``Cluster.admit_ok``
+(same-engine / slot / KV eligibility).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+from repro.core.configdict import Entry
+from repro.core.engines import EngineSpec
+from repro.core.job import Request, exec_time
+from repro.core.perfmodel import HBM_UTIL, profile_engine
+from repro.core.workers import WorkerPool
+
+# batching efficiency per profiled bottleneck: the marginal cost ``alpha``
+# of one extra batch member, relative to its solo service rate.  Decode on
+# a memory-bound engine streams the same weights for every member, so an
+# extra member is nearly free; compute-bound engines pay close to the
+# member's full FLOP cost.
+BATCH_ALPHA = {"memory": 0.15, "collective": 0.35, "compute": 0.6}
+DEFAULT_ALPHA = 0.5
+
+
+def batch_multiplier(alpha: float, b: int) -> float:
+    """Per-member service-rate multiplier at batch size ``b`` (solo = 1)."""
+    if b <= 1:
+        return 1.0
+    return 1.0 / (1.0 + alpha * (b - 1))
+
+
+def batch_throughput(alpha: float, b: int) -> float:
+    """Aggregate batch throughput in units of one solo stream."""
+    return b * batch_multiplier(alpha, b)
+
+
+def default_request(spec: EngineSpec, queries: int) -> Request:
+    """The engine-default token counts for a job of ``queries`` queries."""
+    return Request(queries * spec.prefill_len, queries * spec.decode_len)
+
+
+_profile = functools.lru_cache(maxsize=None)(profile_engine)
+
+
+def _decode_frac(entry: Entry) -> float:
+    """Entry.decode_frac clamped away from 0/1 so both token rates stay
+    finite (degenerate all-prefill / all-decode profiles)."""
+    return min(max(entry.decode_frac, 0.05), 0.95)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchProfile:
+    """Per-(entry, engine, pool) serving rates and batch budgets."""
+
+    prefill_rate: float     # prompt tokens / s, job served alone
+    decode_rate: float      # decode tokens / s, job served alone
+    kv_limit: int           # max concurrent jobs by KV-cache bytes
+    kv_job_bytes: float     # one microbatch cache (per in-flight job)
+    alpha: float            # marginal batching cost (bottleneck-derived)
+
+
+@functools.lru_cache(maxsize=None)
+def batch_profile(entry: Entry, spec: EngineSpec,
+                  pool: WorkerPool) -> BatchProfile:
+    """Token rates + batch budgets for one (engine, worker) deployment.
+
+    Rates are calibrated so the engine-default token counts reproduce the
+    profiled ``exec_time`` exactly; the KV budget mirrors the feasibility
+    check in ``repro.core.perfmodel.estimate`` (weights + caches + 20%
+    activation headroom must fit the replica's HBM).
+    """
+    df = _decode_frac(entry)
+    prefill_rate = spec.prefill_len * entry.qps / (1.0 - df)
+    decode_rate = spec.decode_len * entry.qps / df
+    prof = _profile(spec)
+    budget = entry.chips_per_replica * pool.chip_hbm_bytes * HBM_UTIL
+    free = budget / 1.2 - prof.weights_bytes
+    if prof.kv_bytes > 0:
+        kv_limit = max(1, int(free // prof.kv_bytes))
+    else:
+        kv_limit = 1 << 30
+    alpha = BATCH_ALPHA.get(entry.bottleneck, DEFAULT_ALPHA)
+    return BatchProfile(prefill_rate, decode_rate, kv_limit,
+                        prof.kv_bytes, alpha)
+
+
+def solo_service(entry: Entry, prof: BatchProfile,
+                 request: Optional[Request], queries: int):
+    """(work_s, prefill_s): a job's total solo service seconds, and the
+    prefix of that spent in admission + prefill (the rest is per-token
+    decode).
+
+    Without a ``Request`` the total is ``exec_time(entry, queries)``
+    bit-for-bit, so forcing ``max_batch=1`` reproduces the job-level
+    simulator exactly.  With a ``Request`` the token counts modulate the
+    service time through the calibrated rates.
+    """
+    if request is None:
+        work = exec_time(entry, queries)
+        prefill = (entry.preproc_s
+                   + (queries / entry.qps) * (1.0 - _decode_frac(entry)))
+        return work, min(prefill, work)
+    prefill = entry.preproc_s + request.prompt_tokens / prof.prefill_rate
+    return prefill + request.decode_tokens / prof.decode_rate, prefill
+
+
+def batch_stats(cluster) -> Dict[str, Dict[str, float]]:
+    """Per-worker serving-bridge stats for demos and benchmarks."""
+    from repro.core.simulator import BatchedWorkerSim
+    out: Dict[str, Dict[str, float]] = {}
+    for name, ws in cluster.workers.items():
+        if isinstance(ws, BatchedWorkerSim) and ws.admitted:
+            out[name] = {
+                "admitted": ws.admitted,
+                "peak_batch": ws.peak_batch,
+                "prefill_tokens": ws.prefill_tokens,
+                "decoded_tokens": ws.decoded_tokens,
+            }
+    return out
+
+
+def __getattr__(name):
+    # BatchedWorkerSim lives next to WorkerSim in repro.core.simulator (the
+    # simulator imports this module's math at load time, so the class
+    # can't live here without an import cycle); re-export it lazily so
+    # ``from repro.core.serving_bridge import BatchedWorkerSim`` works.
+    if name in ("BatchedWorkerSim", "_InFlight"):
+        from repro.core import simulator
+        return getattr(simulator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

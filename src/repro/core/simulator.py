@@ -16,6 +16,18 @@ to the reference tick-scanning loop preserved in
 ``repro.core.simulator_legacy.LegacySimulator``.  Fleet-scale runs
 (10k jobs x 64 pools) complete in seconds; see
 ``benchmarks/scheduler_experiments.py`` for the old-vs-new comparison.
+
+Two serving models share the engine (``Simulator(..., serving=...)``):
+
+* ``"job"`` (default, the paper's model) — a job occupies its worker
+  exclusively for ``exec_time`` seconds.
+* ``"batched"`` — the serving bridge (``repro.core.serving_bridge``):
+  workers run continuous batches of same-engine jobs under max-batch and
+  KV-cache-byte budgets, a prefill phase plus per-token decode draining at
+  the profile-calibrated token rates, and every batch change re-estimates
+  member completions through the event heap.  ``BatchedWorkerSim`` below
+  holds the per-worker batch state; the profile math lives in the bridge
+  module.
 """
 
 from __future__ import annotations
@@ -30,7 +42,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.configdict import ConfigDict, Entry
-from repro.core.job import Job, exec_time
+from repro.core.job import Job, Request, exec_time
+from repro.core.serving_bridge import batch_multiplier
 from repro.core.workers import WorkerPool, default_fleet
 
 
@@ -48,6 +61,117 @@ class WorkerSim:
 
     def idle(self, now: float) -> bool:
         return self.busy_until <= now and self.failed_until <= now
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One continuous-batch member, tracked in solo-equivalent service
+    seconds: ``work_s`` total, ``served_s`` done so far (drains at
+    ``m(b)`` of the solo rate).  ``prefill_s`` marks the boundary between
+    the admission+prefill prefix and the per-token decode phase, matching
+    the real engine's prefill-then-decode loop
+    (``repro.serving.engine``)."""
+
+    jid: int
+    work_s: float
+    prefill_s: float
+    request: Request
+    served_s: float = 0.0
+
+    @property
+    def remaining_s(self) -> float:
+        return self.work_s - self.served_s
+
+
+@dataclasses.dataclass
+class BatchedWorkerSim(WorkerSim):
+    """Continuous-batching service model for one worker pool (the serving
+    bridge, ``serving="batched"``; profile math in
+    ``repro.core.serving_bridge``).
+
+    Replaces exclusive occupancy with an active batch of same-engine
+    jobs.  ``idle`` means "can admit another member"; ``busy_until``
+    tracks the earliest slot-free time while the batch is full (so
+    policies' backlog estimates keep working) and the provisioning delay
+    of elastic clones."""
+
+    max_batch: int = 8
+    alpha_override: Optional[float] = None
+    active: Dict[int, _InFlight] = dataclasses.field(default_factory=dict)
+    last_progress: float = 0.0
+    batch_engine: Optional[str] = None
+    batch_entry: Optional[Entry] = None
+    batch_alpha_: float = 0.5
+    kv_limit: int = 1
+    kv_job_bytes: float = 0.0
+    # serving stats (EngineStats analogue at fleet scale)
+    admitted: int = 0
+    peak_batch: int = 0
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+
+    def _has_slot(self) -> bool:
+        return (not self.active
+                or len(self.active) < min(self.max_batch, self.kv_limit))
+
+    def idle(self, now: float) -> bool:
+        return (self.busy_until <= now and self.failed_until <= now
+                and self._has_slot())
+
+    def can_admit(self, engine: str, now: float) -> bool:
+        return self.idle(now) and (self.batch_engine is None
+                                   or self.batch_engine == engine)
+
+    def multiplier(self, b: Optional[int] = None) -> float:
+        return batch_multiplier(self.batch_alpha_,
+                                len(self.active) if b is None else b)
+
+    def accrue(self, now: float):
+        """Drain every member by the elapsed wall time at the current
+        batch multiplier; account busy time and energy (the whole batch
+        shares one engine's power draw — batching's energy win)."""
+        dt = now - self.last_progress
+        self.last_progress = now
+        if not self.active or dt <= 0:
+            return
+        m = self.multiplier()
+        for f in self.active.values():
+            f.served_s = min(f.work_s, f.served_s + dt * m)
+        self.busy_s += dt
+        self.energy_j += self.batch_entry.power_w * dt
+
+    def admit(self, now: float, jid: int, engine: str, entry: Entry,
+              prof, request: Request, work_s: float, prefill_s: float):
+        assert self.batch_engine in (None, engine), "mixed-engine batch"
+        if not self.active:
+            self.batch_engine = engine
+            self.batch_entry = entry
+            self.batch_alpha_ = (self.alpha_override
+                                 if self.alpha_override is not None
+                                 else prof.alpha)
+            self.kv_limit = prof.kv_limit
+            self.kv_job_bytes = prof.kv_job_bytes
+            self.last_progress = now
+        self.active[jid] = _InFlight(jid, work_s, prefill_s, request)
+        self.admitted += 1
+        self.peak_batch = max(self.peak_batch, len(self.active))
+
+    def finish(self, jid: int):
+        f = self.active.pop(jid, None)
+        if f is not None:
+            self.prefill_tokens += f.request.prompt_tokens
+            self.decoded_tokens += f.request.decode_tokens
+        if not self.active:
+            self.batch_engine = None
+            self.batch_entry = None
+
+    def on_failure(self, now: float):
+        """Worker died: partial service is lost, the batch resets (the
+        simulator re-queues every killed member for checkpoint-restart)."""
+        self.accrue(now)
+        self.active.clear()
+        self.batch_engine = None
+        self.batch_entry = None
 
 
 @dataclasses.dataclass
@@ -83,10 +207,20 @@ class FailureEvent:
 
 class Cluster:
     def __init__(self, cd: ConfigDict, fleet: Optional[Sequence[WorkerPool]]
-                 = None):
+                 = None, serving: str = "job", max_batch: int = 8,
+                 batch_alpha: Optional[float] = None):
         self.cd = cd
+        self.serving = serving
+        self._max_batch = max_batch
+        self._batch_alpha = batch_alpha
         self.workers: Dict[str, WorkerSim] = {
-            w.name: WorkerSim(w) for w in (fleet or default_fleet())}
+            w.name: self._make_worker(w) for w in (fleet or default_fleet())}
+
+    def _make_worker(self, pool: WorkerPool) -> WorkerSim:
+        if self.serving == "batched":
+            return BatchedWorkerSim(pool, max_batch=self._max_batch,
+                                    alpha_override=self._batch_alpha)
+        return WorkerSim(pool)
 
     def idle_workers(self, now: float) -> List[str]:
         return [n for n, w in self.workers.items() if w.idle(now)]
@@ -95,6 +229,34 @@ class Cluster:
         ent = (self.cd.default_entry(engine, worker) if use_default
                else self.cd.optimal(engine, worker))
         return ent is not None and ent.qps > 0
+
+    # -- serving-bridge views (identical to plain idleness in job mode) ----
+
+    def admit_ok(self, job: Job, worker: str, now: float) -> bool:
+        """Can ``worker`` start/admit ``job`` right now?  In job mode this
+        is plain idleness; in batched mode it adds the bridge's batch
+        formation rules (same engine, free slot, KV headroom)."""
+        ws = self.workers[worker]
+        if isinstance(ws, BatchedWorkerSim):
+            return ws.can_admit(job.engine, now)
+        return ws.idle(now)
+
+    def admit_engine_ok(self, engine: str, worker: str, now: float) -> bool:
+        ws = self.workers[worker]
+        if isinstance(ws, BatchedWorkerSim):
+            return ws.can_admit(engine, now)
+        return ws.idle(now)
+
+    def depth_penalty(self, worker: str, now: float) -> float:
+        """Queue-depth-adjusted latency factor: how much slower a job runs
+        if it joins ``worker``'s current batch (``1 + alpha * b`` for a
+        joinable batch of ``b``; 1.0 in job mode, for empty batches, and
+        for full batches the job would have to wait out anyway)."""
+        ws = self.workers[worker]
+        if (isinstance(ws, BatchedWorkerSim) and ws.active
+                and ws.idle(now)):
+            return 1.0 + ws.batch_alpha_ * len(ws.active)
+        return 1.0
 
 
 class Policy:
@@ -127,10 +289,26 @@ class Simulator:
                  elastic_max: int = 0,
                  elastic_threshold: int = 6,
                  provision_s: float = 30.0,
+                 serving: str = "job",
+                 max_batch: int = 8,
+                 batch_alpha: Optional[float] = None,
+                 engines: Optional[dict] = None,
                  seed: int = 0):
+        if serving not in ("job", "batched"):
+            raise ValueError(f"serving must be 'job' or 'batched', "
+                             f"got {serving!r}")
+        if serving == "batched" and speculative:
+            raise ValueError("speculative re-dispatch is not supported "
+                             "with serving='batched' (a batch member has "
+                             "no single backup worker)")
+        self.serving = serving
+        if serving == "batched":
+            from repro.core.engines import default_engines
+            self._engines = dict(engines or default_engines())
         self.cd = cd
         self.policy = policy
-        self.cluster = Cluster(cd, fleet)
+        self.cluster = Cluster(cd, fleet, serving=serving,
+                               max_batch=max_batch, batch_alpha=batch_alpha)
         self.tick = tick
         self.failures = sorted(failures, key=lambda f: f.at)
         self.straggler_prob = straggler_prob
@@ -237,14 +415,27 @@ class Simulator:
                             del running[jid]
                             w.busy_until = now
                             queue.append(rec.job)   # checkpoint-restart
+                    if isinstance(w, BatchedWorkerSim):
+                        w.on_failure(now)
                 # 3) complete finished jobs (running is at most one record
-                # per worker, so this scan is O(W), not O(jobs))
-                for jid, rec in list(running.items()):
-                    if rec.end <= now + 1e-12:
-                        del running[jid]
-                        results.append(rec)
-                        w = self.cluster.workers[rec.worker]
-                        w.last_freed = rec.end
+                # per worker in job mode and at most max_batch in batched
+                # mode, so this scan is O(W), not O(jobs))
+                due = [(jid, rec) for jid, rec in running.items()
+                       if rec.end <= now + 1e-12]
+                rebatch: Dict[str, BatchedWorkerSim] = {}
+                for jid, rec in due:
+                    del running[jid]
+                    results.append(rec)
+                    w = self.cluster.workers[rec.worker]
+                    w.last_freed = rec.end
+                    if isinstance(w, BatchedWorkerSim):
+                        w.accrue(now)
+                        w.finish(jid)
+                        rebatch[rec.worker] = w
+                # surviving batch members speed up (fewer sharers):
+                # re-estimate their completions through the heap
+                for w in rebatch.values():
+                    self._rebatch(w, now, running)
                 # 3b) straggler mitigation (speculative re-dispatch)
                 if self.speculative:
                     self._speculate(now, running)
@@ -349,14 +540,17 @@ class Simulator:
                       for n in self._clone_names):
                 slot += 1
             name = f"{base.name}__clone{slot}"
-            clone = WorkerSim(base)
+            clone = self.cluster._make_worker(base)
             clone.busy_until = now + self.provision_s
             self.cluster.workers[name] = clone
             self._clone_names.append(name)
             self._notify_worker_free(name, clone.busy_until)
         elif not queue:
             for name in list(self._clone_names):
-                if self.cluster.workers[name].idle(now):
+                ws = self.cluster.workers[name]
+                # a batched clone is "idle" whenever it has a free slot —
+                # only retire it once its batch has fully drained
+                if ws.idle(now) and not getattr(ws, "active", None):
                     del self.cluster.workers[name]
                     self._clone_names.remove(name)
                     self._clones -= 1
@@ -364,6 +558,10 @@ class Simulator:
     def _start(self, a: Assignment, now: float, queue, running,
                first_attempt, decision_time):
         w = self.cluster.workers[a.worker]
+        if isinstance(w, BatchedWorkerSim):
+            self._start_batched(a, w, now, queue, running, first_attempt,
+                                decision_time)
+            return
         assert w.idle(now), f"{a.worker} busy"
         queue.remove(a.job)
         exec_s = exec_time(a.entry, a.job.queries) * w.slowdown
@@ -389,3 +587,76 @@ class Simulator:
                         decision_time.get(a.job.id, 0.0))
         running[a.job.id] = rec
         self._notify_end_changed(a.job.id, end)
+
+    # ------------------------------------------------------------------
+    # serving bridge (serving="batched"): continuous-batching service
+
+    def _start_batched(self, a: Assignment, w: BatchedWorkerSim,
+                       now: float, queue, running, first_attempt,
+                       decision_time):
+        from repro.core.serving_bridge import (batch_profile,
+                                               default_request,
+                                               solo_service)
+        if not w.can_admit(a.job.engine, now):
+            # the policy raced the batch-formation rules (engine mismatch
+            # or KV/slot budget); the job stays queued for the next round
+            first_attempt.setdefault(a.job.id, now)
+            return
+        queue.remove(a.job)
+        spec = self._engines[a.job.engine]
+        prof = batch_profile(a.entry, spec, w.pool)
+        req = a.job.request
+        work, prefill = solo_service(a.entry, prof, req, a.job.queries)
+        # the same noise model as job-level serving, in the same op order
+        # (forcing max_batch=1 reproduces job mode bit-for-bit)
+        work *= w.slowdown
+        prefill *= w.slowdown
+        if self.exec_noise:
+            s = self.exec_noise
+            noise = float(self.rng.lognormal(-0.5 * s * s, s))
+            work *= noise
+            prefill *= noise
+        if self.straggler_prob and self.rng.random() < self.straggler_prob:
+            work *= self.straggler_factor
+            prefill *= self.straggler_factor
+        w.accrue(now)
+        w.admit(now, a.job.id, a.job.engine, a.entry, prof,
+                req or default_request(spec, a.job.queries), work, prefill)
+        w.last_assigned = now
+        w.n_jobs += 1
+        start = now
+        end = start + work
+        waiting = start - a.job.arrival
+        e2e = end - a.job.arrival
+        overhead = now - first_attempt.get(a.job.id, now)
+        rec = JobResult(a.job, a.worker, f"{a.entry.mode}/r"
+                        f"{a.entry.chips_per_replica}", start, end, waiting,
+                        work, e2e, e2e > a.job.t_qos,
+                        max(0.0, e2e - a.job.t_qos), overhead,
+                        decision_time.get(a.job.id, 0.0))
+        running[a.job.id] = rec
+        self._notify_end_changed(a.job.id, end)
+        # joining slows the whole batch down: re-estimate everyone
+        self._rebatch(w, now, running)
+
+    def _rebatch(self, w: BatchedWorkerSim, now: float,
+                 running: Dict[int, JobResult]):
+        """Batch membership changed: re-estimate every member's completion
+        at the new sharing multiplier and re-index the changed wakes
+        (``accrue`` must have brought the batch up to ``now`` first)."""
+        m = w.multiplier()
+        ends = []
+        for f in w.active.values():
+            end = now + f.remaining_s / m
+            ends.append(end)
+            rec = running[f.jid]
+            if rec.end != end:
+                rec.end = end
+                rec.exec_s = end - rec.start
+                rec.e2e = end - rec.job.arrival
+                rec.violated = rec.e2e > rec.job.t_qos
+                rec.excess = max(0.0, rec.e2e - rec.job.t_qos)
+                self._notify_end_changed(f.jid, end)
+        # full batch: policies' backlog view is the earliest slot-free
+        # time; otherwise the worker can admit right away
+        w.busy_until = now if w._has_slot() else min(ends)

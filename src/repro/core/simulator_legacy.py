@@ -30,6 +30,10 @@ class LegacySimulator(Simulator):
     name = "legacy"
 
     def run(self, jobs: Sequence[Job]) -> List[JobResult]:
+        if getattr(self, "serving", "job") != "job":
+            raise NotImplementedError(
+                "LegacySimulator predates the serving bridge; "
+                "serving='batched' runs on the event-heap Simulator only")
         pending = sorted(jobs, key=lambda j: j.arrival)
         queue: List[Job] = []
         results: List[JobResult] = []

@@ -36,9 +36,13 @@ class SloMael(Policy):
             # expected backlog from its *own* model-based bookkeeping (the
             # preprocessing-time plan) — it does not re-observe the cluster,
             # which is exactly the "no adaptive rescheduling" limitation the
-            # paper calls out.
+            # paper calls out.  Under the batched serving bridge the
+            # execution estimate is queue-depth-adjusted (joining a live
+            # batch runs 1 + alpha*b slower); 1.0 in job mode.
             wait = max(0.0, self.backlog.get(w, 0.0) - now)
-            exp_latency = wait + ent.preproc_s + job.queries / ent.qps
+            pen = cluster.depth_penalty(w, now)
+            exp_latency = wait + pen * (ent.preproc_s
+                                        + job.queries / ent.qps)
             ok = exp_latency <= t_rem
             # prefer SLO-satisfying mappings; break ties by expected latency
             if (ok and not best_ok) or (
@@ -76,6 +80,8 @@ class SloMael(Policy):
             if jid not in by_id:
                 continue
             job = by_id[jid]
+            if not cluster.admit_ok(job, w, now):
+                continue    # batched: the live batch serves another engine
             ent = cluster.cd.default_entry(job.engine, w)
             out.append(Assignment(job, w, ent))
             fifo.pop(0)

@@ -16,6 +16,10 @@ the ``synth_fleet`` clusters are built for:
 * ``TenantSpec`` + ``make_workload`` — multi-tenant mixes over the engine
   catalogue with per-tenant QoS tightness.
 * ``scenario``             — named presets used by tests and benchmarks.
+* ``attach_requests``      — token-level ``Request`` annotations (prompt /
+  decode token counts, Pareto-sampled around each engine's profiled
+  per-query shape) for the batched serving bridge; every preset also runs
+  token-level via ``scenario(..., serving="batched")``.
 * ``synth_failures``       — Poisson worker failures / exponential repair.
 """
 
@@ -28,7 +32,8 @@ import numpy as np
 
 from repro.core.configdict import ConfigDict
 from repro.core.engines import default_engines
-from repro.core.job import DEFAULT_QUERIES, Job, exec_time, qos_threshold
+from repro.core.job import (DEFAULT_QUERIES, Job, Request, exec_time,
+                            qos_threshold)
 from repro.core.simulator import FailureEvent
 from repro.core.workers import WorkerPool
 
@@ -239,6 +244,41 @@ def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
 
 
 # ---------------------------------------------------------------------------
+# token-level requests (batched serving bridge)
+
+
+def attach_requests(jobs: Sequence[Job], engines=None, seed: int = 0,
+                    alpha: float = 2.5) -> Sequence[Job]:
+    """Annotate jobs with token-level ``Request``s for the serving bridge.
+
+    Per-query prompt and decode lengths are Pareto-sampled (via the
+    ``ParetoSize`` machinery) around each engine's profiled shape —
+    ``q_min = 0.6 * len`` with tail index ``alpha`` has mean ~= the
+    profiled length, so the aggregate load matches the job-level
+    calibration while individual jobs spread over a heavy-tailed range.
+    Jobs are mutated in place (and returned for convenience).
+    """
+    engines = engines or default_engines()
+    rng = np.random.default_rng(seed)
+    by_engine: dict = {}
+    for i, j in enumerate(jobs):
+        by_engine.setdefault(j.engine, []).append(i)
+    for name, idx in sorted(by_engine.items()):
+        spec = engines[name]
+        p_dist = ParetoSize(alpha, max(1, int(0.6 * spec.prefill_len)),
+                            6 * spec.prefill_len)
+        d_dist = ParetoSize(alpha, max(1, int(0.6 * spec.decode_len)),
+                            6 * spec.decode_len)
+        prompts = p_dist.sample(rng, len(idx))
+        decodes = d_dist.sample(rng, len(idx))
+        for i, p, d in zip(idx, prompts, decodes):
+            job = jobs[i]
+            job.request = Request(int(job.queries * p),
+                                  int(job.queries * d))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
 # scenario presets
 
 
@@ -307,9 +347,19 @@ def _mix(cd, fleet, engines):
 
 def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
              fleet: Optional[Sequence[WorkerPool]] = None,
-             utilization: float = 0.7, seed: int = 0) -> List[Job]:
+             utilization: float = 0.7, seed: int = 0,
+             serving: str = "job") -> List[Job]:
     """Named fleet-scale scenarios over the engine catalogue, calibrated to
-    ``utilization`` of the given fleet (default: the 3-pool paper fleet)."""
+    ``utilization`` of the given fleet (default: the 3-pool paper fleet).
+
+    ``serving="batched"`` additionally attaches token-level ``Request``
+    annotations (see ``attach_requests``) so the trace drives the
+    continuous-batching serving bridge — pair it with
+    ``Simulator(..., serving="batched")``.
+    """
+    if serving not in ("job", "batched"):
+        raise ValueError(f"serving must be 'job' or 'batched', "
+                         f"got {serving!r}")
     from repro.core.workers import default_fleet
     fleet = list(fleet or default_fleet())
     engines, weights = _mix(cd, fleet, list(default_engines()))
@@ -371,7 +421,10 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
         ]
     else:
         raise ValueError(f"unknown scenario {kind!r}; one of {SCENARIOS}")
-    return make_workload(cd, tenants, seed=seed)
+    jobs = make_workload(cd, tenants, seed=seed)
+    if serving == "batched":
+        attach_requests(jobs, seed=seed)
+    return jobs
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,286 @@
+"""Serving bridge (continuous batching, ``serving="batched"``): job-level
+equivalence at forced batch size 1, single-request batches, KV-budget-
+bounded batch formation, same-engine batching rules, token-count service
+modulation, batching's throughput win under overload, and failure
+recovery."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import RoundRobin
+from repro.core.constants import OperatingMode
+from repro.core.engines import default_engines
+from repro.core.job import Job, Request, exec_time
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.serving_bridge import (batch_multiplier, batch_profile,
+                                       batch_stats, batch_throughput,
+                                       default_request, solo_service)
+from repro.core.simulator import BatchedWorkerSim, Simulator
+from repro.core.simulator_legacy import LegacySimulator
+from repro.core.slo_mael import SloMael
+from repro.core.workers import WorkerPool, synth_fleet
+from repro.core.workload import attach_requests, scenario, synth_failures
+
+
+def _key(results):
+    return [(r.job.id, r.worker, r.config, r.start, r.end, r.waiting,
+             r.exec_s, r.e2e, r.violated, r.excess, r.overhead_s)
+            for r in results]
+
+
+# ----------------------------------------------------------------------------
+# batching math
+
+
+def test_multiplier_and_throughput_shape():
+    assert batch_multiplier(0.5, 1) == 1.0
+    ms = [batch_multiplier(0.5, b) for b in range(1, 9)]
+    assert all(a > b for a, b in zip(ms, ms[1:]))     # members slow down
+    ts = [batch_throughput(0.5, b) for b in range(1, 9)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))     # aggregate speeds up
+    # alpha=1 is processor sharing: no aggregate gain
+    assert batch_throughput(1.0, 8) == pytest.approx(1.0)
+
+
+def test_batched_worker_multiplier_matches_bridge(configdict):
+    ws = BatchedWorkerSim(synth_fleet(1, 0, 0)[0], batch_alpha_=0.35)
+    for b in (1, 2, 5, 11):
+        assert ws.multiplier(b) == batch_multiplier(0.35, b)
+
+
+def test_solo_service_default_tokens_match_exec_time(configdict):
+    spec = default_engines()["gemma-2b/bf16"]
+    pool = synth_fleet(1, 0, 0)[0]
+    ent = configdict.optimal(spec.name, pool.name)
+    prof = batch_profile(ent, spec, pool)
+    # no Request: bit-for-bit exec_time
+    work, prefill = solo_service(ent, prof, None, 1234)
+    assert work == exec_time(ent, 1234)
+    assert ent.preproc_s < prefill < work
+    # engine-default Request: algebraically the same service time
+    work_r, _ = solo_service(ent, prof, default_request(spec, 1234), 1234)
+    assert np.isclose(work_r, work, rtol=1e-9)
+
+
+# ----------------------------------------------------------------------------
+# single-request batches + job-level equivalence
+
+
+def test_single_request_batch_is_exactly_job_level(configdict):
+    job = Job(0, "gemma-2b/bf16", 1000, 500.0, 0.0)
+    sim = Simulator(configdict, SynergAI(), exec_noise=0.0,
+                    serving="batched")
+    res = sim.run([job])
+    assert len(res) == 1
+    r = res[0]
+    ent = configdict.optimal(r.job.engine, r.worker)
+    assert r.exec_s == exec_time(ent, r.job.queries)
+    ws = sim.cluster.workers[r.worker]
+    assert ws.peak_batch == 1 and ws.admitted == 1
+    assert not ws.active                                # batch drained
+    spec = default_engines()["gemma-2b/bf16"]
+    assert ws.decoded_tokens == 1000 * spec.decode_len
+
+
+@pytest.mark.parametrize("policy_cls", [SynergAI, SloMael, RoundRobin])
+def test_forced_batch1_matches_job_level(configdict, policy_cls):
+    """max_batch=1 on un-annotated jobs is the job-level simulator,
+    bit-for-bit (same schedule, same noise draws, same results)."""
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "mmpp", n_jobs=250, fleet=fleet, seed=5)
+    a = Simulator(configdict, policy_cls(), fleet=fleet, seed=5).run(jobs)
+    b = Simulator(configdict, policy_cls(), fleet=fleet, seed=5,
+                  serving="batched", max_batch=1).run(jobs)
+    assert _key(a) == _key(b)
+
+
+# ----------------------------------------------------------------------------
+# batch formation
+
+
+def test_kv_budget_caps_batch_formation(configdict):
+    """A worker whose HBM fits weights + ~2.5 microbatch caches must cap
+    its continuous batch at 2 members even with max_batch slots free."""
+    from repro.core.perfmodel import profile_engine
+    spec = default_engines()["gemma-2b/bf16"]
+    prof = profile_engine(spec)
+    hbm = 1.2 * (prof.weights_bytes + 2.5 * prof.kv_bytes) / 0.9
+    pool = WorkerPool("tiny", 1, (OperatingMode("m", 1.0, 1, 1000.0),),
+                      (1, 1), True, chip_hbm_bytes=hbm)
+    cd = characterize({spec.name: spec}, [pool])
+    ent = cd.optimal(spec.name, "tiny")
+    bp = batch_profile(ent, spec, pool)
+    assert bp.kv_limit == 2
+    jobs = [Job(i, spec.name, 500, 1e6, 0.0) for i in range(6)]
+    sim = Simulator(cd, SynergAI(), fleet=[pool], serving="batched",
+                    max_batch=8, exec_noise=0.0)
+    res = sim.run(jobs)
+    assert len(res) == 6
+    ws = sim.cluster.workers["tiny"]
+    assert ws.peak_batch == 2          # KV-evicted, not slot-evicted
+    assert ws.kv_limit == 2
+
+
+def test_batches_are_same_engine_only(configdict):
+    fleet = synth_fleet(1, 0, 0)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, serving="batched")
+    ws = sim.cluster.workers[fleet[0].name]
+    spec = default_engines()["gemma-2b/bf16"]
+    ent = configdict.optimal(spec.name, fleet[0].name)
+    prof = batch_profile(ent, spec, fleet[0])
+    ws.admit(0.0, 0, spec.name, ent, prof, default_request(spec, 100),
+             10.0, 2.0)
+    assert ws.can_admit(spec.name, 0.0)
+    assert not ws.can_admit("qwen3-4b/bf16", 0.0)    # live batch: gemma only
+    ws.finish(0)
+    assert ws.can_admit("qwen3-4b/bf16", 0.0)        # empty batch: model swap
+
+
+def test_depth_penalty_views(configdict):
+    fleet = synth_fleet(1, 0, 0)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, serving="batched",
+                    max_batch=2)
+    cluster = sim.cluster
+    name = fleet[0].name
+    ws = cluster.workers[name]
+    assert cluster.depth_penalty(name, 0.0) == 1.0   # empty batch
+    spec = default_engines()["gemma-2b/bf16"]
+    ent = configdict.optimal(spec.name, name)
+    prof = batch_profile(ent, spec, fleet[0])
+    ws.admit(0.0, 0, spec.name, ent, prof, default_request(spec, 100),
+             10.0, 2.0)
+    assert cluster.depth_penalty(name, 0.0) == 1.0 + ws.batch_alpha_
+    ws.admit(0.0, 1, spec.name, ent, prof, default_request(spec, 100),
+             10.0, 2.0)
+    # full batch: a job would wait it out, no join penalty
+    assert cluster.depth_penalty(name, 0.0) == 1.0
+    job = Job(9, "qwen3-4b/bf16", 100, 1e6, 0.0)
+    assert not cluster.admit_ok(job, name, 0.0)
+
+
+# ----------------------------------------------------------------------------
+# token-level requests
+
+
+def test_attach_requests_and_scenario_knob(configdict):
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "multi-tenant", n_jobs=150, fleet=fleet,
+                    seed=2)
+    assert all(j.request is None for j in jobs)
+    jobs = scenario(configdict, "multi-tenant", n_jobs=150, fleet=fleet,
+                    seed=2, serving="batched")
+    assert all(j.request is not None for j in jobs)
+    assert all(j.request.prompt_tokens > 0 and j.request.decode_tokens > 0
+               for j in jobs)
+    # same seed -> same annotations
+    again = scenario(configdict, "multi-tenant", n_jobs=150, fleet=fleet,
+                     seed=2, serving="batched")
+    assert [j.request for j in jobs] == [j.request for j in again]
+    with pytest.raises(ValueError):
+        scenario(configdict, "mmpp", n_jobs=10, serving="nope")
+
+
+def test_token_counts_modulate_service_time(configdict):
+    spec = default_engines()["gemma-2b/bf16"]
+    base = 1000 * spec.decode_len
+
+    def run_one(decode_tokens):
+        job = Job(0, spec.name, 1000, 1e6, 0.0,
+                  request=Request(1000 * spec.prefill_len, decode_tokens))
+        res = Simulator(configdict, SynergAI(), exec_noise=0.0,
+                        serving="batched").run([job])
+        return res[0].exec_s
+
+    assert run_one(4 * base) > run_one(base) > run_one(base // 4)
+
+
+# ----------------------------------------------------------------------------
+# end-to-end: throughput, conservation, failures
+
+
+def test_batching_wins_under_overload(configdict):
+    """The point of the bridge: under sustained overload, continuous
+    batching drains the queue faster than exclusive job-level service —
+    fewer QoS violations and a lower p99."""
+    fleet = synth_fleet(2, 3, 3)
+    stats = {}
+    for serving in ("job", "batched"):
+        jobs = scenario(configdict, "mmpp", n_jobs=400, fleet=fleet,
+                        seed=3, utilization=1.5, serving=serving)
+        res = Simulator(configdict, SynergAI(), fleet=fleet, seed=3,
+                        serving=serving).run(jobs)
+        assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+        e2e = sorted(r.e2e for r in res)
+        stats[serving] = (sum(r.violated for r in res),
+                          e2e[int(0.99 * len(e2e))])
+    assert stats["batched"][0] < stats["job"][0]
+    assert stats["batched"][1] < stats["job"][1]
+
+
+def test_batched_failures_requeue_and_complete(configdict):
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "flash", n_jobs=300, fleet=fleet, seed=4,
+                    serving="batched")
+    failures = synth_failures(fleet, jobs[-1].arrival, mtbf_s=400.0,
+                              mttr_s=80.0, seed=4)
+    assert failures
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, failures=failures,
+                    seed=4, serving="batched")
+    res = sim.run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    for r in res:       # nothing completes inside a failure window
+        for f in failures:
+            if f.worker == r.worker:
+                assert (r.end <= f.at + 1e-6
+                        or r.end >= f.at + f.duration - 1e-6), (r, f)
+    assert batch_stats(sim.cluster)    # bridge actually served batches
+
+
+def test_batched_conservation_and_stats(configdict):
+    fleet = synth_fleet(2, 2, 2)
+    jobs = scenario(configdict, "poisson", n_jobs=300, fleet=fleet,
+                    seed=1, utilization=1.2, serving="batched")
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, seed=1,
+                    serving="batched")
+    res = sim.run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    for r in res:
+        assert r.start >= r.job.arrival - 1e-9
+        assert np.isclose(r.e2e, r.end - r.job.arrival)
+        assert r.exec_s > 0 and r.excess >= 0
+        assert r.violated == (r.e2e > r.job.t_qos)
+    st = batch_stats(sim.cluster)
+    assert sum(s["admitted"] for s in st.values()) == len(jobs)
+    assert max(s["peak_batch"] for s in st.values()) > 1
+    assert all(s["decoded_tokens"] > 0 for s in st.values())
+
+
+def test_batched_elastic_clones_serve_and_retire(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    jobs = scenario(configdict, "flash", n_jobs=200, fleet=fleet, seed=2,
+                    utilization=1.5, serving="batched")
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, seed=2,
+                    serving="batched", elastic_max=3, elastic_threshold=4)
+    res = sim.run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    assert any("__clone" in r.worker for r in res)   # clones took traffic
+    assert sim._clones == 0                          # ...and retired idle
+
+
+# ----------------------------------------------------------------------------
+# guard rails
+
+
+def test_legacy_simulator_rejects_batched(configdict):
+    sim = LegacySimulator(configdict, SynergAI(), serving="batched")
+    with pytest.raises(NotImplementedError):
+        sim.run([Job(0, "gemma-2b/bf16", 100, 100.0, 0.0)])
+
+
+def test_speculative_batched_combination_rejected(configdict):
+    with pytest.raises(ValueError):
+        Simulator(configdict, SynergAI(), serving="batched",
+                  speculative=True)
+    with pytest.raises(ValueError):
+        Simulator(configdict, SynergAI(), serving="typo")

@@ -1,0 +1,81 @@
+"""Execute every ```python code block in README.md and docs/*.md so the
+documentation cannot rot (CI runs this as the `docs` job).
+
+Rules:
+  * only fences tagged exactly ``python`` run; ``python no-run`` (or any
+    other info string) is skipped, as are ``bash`` blocks;
+  * blocks within one file share a namespace and run top to bottom, so a
+    later snippet may reuse names (e.g. ``cd``) from an earlier one;
+  * the repo's ``src/`` is put on ``sys.path`` — snippets are written
+    exactly as a user would run them with ``PYTHONPATH=src``.
+
+Usage:  python tools/check_doc_snippets.py [files...]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+
+
+def extract(path: pathlib.Path):
+    """Yield (lineno, code) for each runnable ```python block."""
+    lines = path.read_text().splitlines()
+    block, start, lang = None, 0, None
+    for i, line in enumerate(lines, 1):
+        m = FENCE.match(line.strip())
+        if m and block is None:
+            lang = (m.group(1), m.group(2).strip())
+            block, start = [], i + 1
+        elif m and block is not None:
+            if lang == ("python", ""):
+                yield start, "\n".join(block)
+            block, lang = None, None
+        elif block is not None:
+            block.append(line)
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(ROOT))
+    except ValueError:
+        return str(path)
+
+
+def main(argv=None):
+    args = (argv if argv is not None else sys.argv[1:])
+    files = ([pathlib.Path(a).resolve() for a in args] if args
+             else [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))])
+    sys.path.insert(0, str(ROOT / "src"))
+    failures = 0
+    for path in files:
+        namespace: dict = {"__name__": f"docsnippet:{path.name}"}
+        n = 0
+        for lineno, code in extract(path):
+            n += 1
+            t0 = time.perf_counter()
+            try:
+                exec(compile(code, f"{path}:{lineno}", "exec"), namespace)
+            except Exception as e:                  # noqa: BLE001
+                failures += 1
+                print(f"FAIL {_rel(path)}:{lineno}: "
+                      f"{type(e).__name__}: {e}")
+                continue
+            print(f"ok   {_rel(path)}:{lineno} "
+                  f"({time.perf_counter() - t0:.1f}s)")
+        if not n:
+            print(f"     {_rel(path)}: no python snippets")
+    if failures:
+        print(f"{failures} snippet(s) failed")
+        return 1
+    print("all doc snippets passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
