@@ -11,9 +11,16 @@ fleet-scale benches:
   wall-clock on an overloaded MMPP fleet scenario: the same trace served
   with exclusive job occupancy vs continuous batching
   (``serving="batched"``).
+* ``bench_streaming`` — streaming QoS under the bridge: the mmpp overload
+  preset with per-class TTFT/TPOT deadlines, served on an aggregated
+  fleet vs a prefill/decode-disaggregated one
+  (``synth_fleet(..., disaggregate=...)``).  Headline: disaggregation
+  cuts TTFT violations (prefill pools turn over fast; decodes can't camp
+  on them) at the cost of TPOT pressure on the shrunken decode side.
 
 Run standalone:  PYTHONPATH=src python benchmarks/scheduler_experiments.py
-(see --help for the fleet/scoring/serving knobs)
+(see --help for the fleet/scoring/serving knobs; ``--json`` dumps the
+fleet/serving/streaming bench outputs for CI artifacts)
 """
 
 from __future__ import annotations
@@ -212,6 +219,55 @@ def bench_serving(cd=None, n_jobs=2000, pools=(2, 5, 5),
     return out
 
 
+def bench_streaming(cd=None, n_jobs=1500, pools=(2, 5, 5),
+                    utilization=1.3, kind="mmpp", streaming=(2.0, 2.5),
+                    prefill_frac=0.4, emit=print):
+    """Aggregated vs prefill/decode-disaggregated serving under streaming
+    SLOs: the same overloaded trace with per-class TTFT/TPOT deadlines
+    (``scenario(..., streaming=...)``) on a plain batched fleet vs one
+    whose replicas are phase-tagged.  ``prefill_frac`` overprovisions the
+    short latency-critical phase (0.4 vs the work's ~15% prefill share)
+    so TTFT survives bursts — the classic disaggregation trade: first
+    tokens come fast, decode capacity shrinks."""
+    from repro.core.simulator import Simulator
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario
+
+    cd = cd or characterize()
+    fleets = {"aggregated": synth_fleet(*pools),
+              "disaggregated": synth_fleet(*pools,
+                                           disaggregate=prefill_frac)}
+    out = {}
+    for label, fleet in fleets.items():
+        jobs = scenario(cd, kind, n_jobs=n_jobs, fleet=fleet,
+                        utilization=utilization, seed=0,
+                        serving="batched", streaming=streaming)
+        for P in (SynergAI, SloMael, RoundRobin):
+            t0 = time.perf_counter()
+            res = Simulator(cd, P(), fleet=fleet, seed=0,
+                            serving="batched").run(jobs)
+            dt = time.perf_counter() - t0
+            s = summarize(res)
+            out[(label, P.name)] = s
+            emit(f"streaming,{kind},{label},{P.name},"
+                 f"ttft_violations={s['ttft_violations']},"
+                 f"tpot_violations={s['tpot_violations']},"
+                 f"violations={s['violations']},"
+                 f"ttft_p99_s={s.get('ttft_p99_s', float('nan')):.2f},"
+                 f"tpot_p99_ms={1e3 * s.get('tpot_p99_s', float('nan')):.2f},"
+                 f"p99_s={s['e2e_p99_s']:.1f},wall_s={dt:.2f}")
+    agg = out[("aggregated", "SynergAI")]
+    dis = out[("disaggregated", "SynergAI")]
+    emit(f"streaming_headline,SynergAI,"
+         f"ttft_violations_agg={agg['ttft_violations']},"
+         f"ttft_violations_disagg={dis['ttft_violations']},"
+         f"agg_over_disagg="
+         f"{agg['ttft_violations'] / max(1, dis['ttft_violations']):.2f}x,"
+         f"ttft_p99_agg_s={agg.get('ttft_p99_s', float('nan')):.2f},"
+         f"ttft_p99_disagg_s={dis.get('ttft_p99_s', float('nan')):.2f}")
+    return out
+
+
 def main(argv=None):
     import argparse
     p = argparse.ArgumentParser(
@@ -231,8 +287,17 @@ def main(argv=None):
     p.add_argument("--skip-serving", action="store_true",
                    help="skip the job-level vs batched serving-bridge "
                         "comparison (scenario(..., serving='batched'))")
+    p.add_argument("--skip-streaming", action="store_true",
+                   help="skip the streaming-QoS aggregated vs "
+                        "disaggregated comparison (bench_streaming)")
+    p.add_argument("--skip-fleet", action="store_true",
+                   help="skip the fleet-scale bench_fleet run")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="dump the serving/streaming bench summaries as "
+                        "JSON (CI artifact)")
     args = p.parse_args(argv)
     cd = characterize()
+    blob = {}
     if not args.skip_paper:
         print("# paper experiments (Fig. 7-10)")
         run(cd, seeds=(1, 2, 3))
@@ -241,10 +306,20 @@ def main(argv=None):
         bench_scoring(cd)
     if not args.skip_serving:
         print("# serving bridge: job-level vs batched (mmpp overload)")
-        bench_serving(cd)
-    print(f"# fleet scale ({args.kind})")
-    bench_fleet(cd, n_jobs=args.jobs, pools=tuple(args.pools),
-                kind=args.kind)
+        blob["serving"] = bench_serving(cd)
+    if not args.skip_streaming:
+        print("# streaming QoS: aggregated vs disaggregated pools")
+        blob["streaming"] = bench_streaming(cd)
+    if not args.skip_fleet:
+        print(f"# fleet scale ({args.kind})")
+        bench_fleet(cd, n_jobs=args.jobs, pools=tuple(args.pools),
+                    kind=args.kind)
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({bench: {"/".join(k): v for k, v in d.items()}
+                       for bench, d in blob.items()}, f, indent=1)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,13 @@ configuration of each device").
 
 Dispatch goes through ``Cluster.admit_ok`` — plain idleness in job mode,
 plus the serving bridge's batch-formation rules (same-engine batches under
-slot/KV budgets) when the simulator runs with ``serving="batched"``.
+slot/KV budgets) when the simulator runs with ``serving="batched"``, plus
+the phase-role match under prefill/decode-disaggregated pools
+(``WorkerPool.role``): a baseline never lands a decode phase on a
+prefill-only pool.  That is the whole of their streaming awareness — by
+design they keep ignoring TTFT/TPOT deadlines, exactly as they ignore
+``t_qos`` (paper §5.4), which is what ``bench_streaming`` measures them
+against.
 """
 
 from __future__ import annotations

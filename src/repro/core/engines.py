@@ -8,6 +8,7 @@ the role of the paper's quantized MobileNets.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict
 
 from repro.configs.registry import ARCHS, get_config
@@ -50,3 +51,11 @@ def default_engines() -> Dict[str, EngineSpec]:
                    prefill_len=1024, decode_len=64),
     ]
     return {e.name: e for e in engines}
+
+
+@functools.lru_cache(maxsize=None)
+def engine_catalogue() -> Dict[str, EngineSpec]:
+    """Cached ``default_engines()`` for per-tick / per-arrival hot paths
+    (scheduler streaming gates).  Treat the returned dict as read-only —
+    callers that want their own copy use ``default_engines()``."""
+    return default_engines()

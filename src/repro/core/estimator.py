@@ -46,20 +46,25 @@ class _EngineTable:
         self.index: Dict[str, int] = {}
         self.qps = np.empty((0, len(workers)))
         self.pre = np.empty((0, len(workers)))
+        self.frac = np.empty((0, len(workers)))   # decode_frac (clamped)
 
     def _add(self, engine: str):
+        from repro.core.serving_bridge import decode_fraction
         W = len(self.workers)
         q = np.zeros(W)
         p = np.zeros(W)
+        d = np.zeros(W)
         for wi, w in enumerate(self.workers):
             ent = (self.cd.default_entry(engine, w) if self.use_default
                    else self.cd.optimal(engine, w))
             if ent is not None and ent.qps > 0:
                 q[wi] = ent.qps
                 p[wi] = ent.preproc_s
+                d[wi] = decode_fraction(ent)
         self.index[engine] = len(self.qps)
         self.qps = np.vstack([self.qps, q[None]])
         self.pre = np.vstack([self.pre, p[None]])
+        self.frac = np.vstack([self.frac, d[None]])
 
     def gather(self, jobs: Sequence[Job]):
         idx = self.index
@@ -72,7 +77,19 @@ class _EngineTable:
                     self._add(job.engine)
             rows = np.fromiter((idx[j.engine] for j in jobs),
                                dtype=np.intp, count=len(jobs))
-        return self.qps[rows], self.pre[rows]
+        return self.qps[rows], self.pre[rows], self.frac[rows]
+
+
+def _table(cd: ConfigDict, workers: List[str],
+           use_default: bool) -> _EngineTable:
+    """The per-(use_default, worker-tuple) ``_EngineTable``, cached on the
+    ConfigDict (one cache shared by every matrix builder below)."""
+    cache = cd.__dict__.setdefault("_row_cache", {})
+    key = (use_default, tuple(workers))
+    tab = cache.get(key)
+    if tab is None:
+        tab = cache[key] = _EngineTable(cd, workers, use_default)
+    return tab
 
 
 def score_matrices(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
@@ -81,12 +98,26 @@ def score_matrices(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
     (``qps == 0`` marks infeasible pairs), cached per worker tuple on the
     ConfigDict.  Shared input builder for the numpy scorer below and the
     Pallas kernel path (``repro.core.pallas_scoring``)."""
-    cache = cd.__dict__.setdefault("_row_cache", {})
-    key = (use_default, tuple(workers))
-    tab = cache.get(key)
-    if tab is None:
-        tab = cache[key] = _EngineTable(cd, workers, use_default)
-    return tab.gather(jobs)
+    return _table(cd, workers, use_default).gather(jobs)[:2]
+
+
+def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
+                         workers: List[str], use_default: bool = False):
+    """[J, W] (prefill_s, decode_s) solo-service matrices (inf where
+    infeasible): the prefill prefix ``pre + (q/qps) * (1 - decode_frac)``
+    — a worker's TTFT contribution — and the per-token decode remainder
+    ``(q/qps) * decode_frac``.  Their sum is Eq. 2's ``t_estimated``; the
+    split is what streaming-QoS gating and phase-aware placement under
+    disaggregated pools score against (shares the per-worker-tuple row
+    cache with ``score_matrices``)."""
+    qps, pre, frac = _table(cd, workers, use_default).gather(jobs)
+    q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
+                    count=len(jobs))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        exec_q = q[:, None] / qps
+        prefill = np.where(qps > 0, pre + exec_q * (1.0 - frac), np.inf)
+        decode = np.where(qps > 0, exec_q * frac, np.inf)
+    return prefill, decode
 
 
 def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],

@@ -26,10 +26,18 @@ class Request:
     and total tokens to decode across all of the job's queries.  Jobs
     without a ``Request`` fall back to the engine's profiled per-query
     shape, which makes the token-level service time identical to the
-    job-level ``exec_time``."""
+    job-level ``exec_time``.
+
+    ``ttft_qos`` / ``tpot_qos`` are the streaming SLOs (PerLLM-style,
+    arXiv:2405.14636): allowed seconds from submission to the first
+    decoded token, and allowed seconds per decoded token after the first.
+    ``None`` means the job carries no streaming deadline — only the
+    end-to-end ``Job.t_qos`` applies, exactly as before the split."""
 
     prompt_tokens: int
     decode_tokens: int
+    ttft_qos: Optional[float] = None    # arrival -> first token budget (s)
+    tpot_qos: Optional[float] = None    # per-decoded-token budget (s/tok)
 
 
 @dataclasses.dataclass
@@ -40,6 +48,7 @@ class Job:
     t_qos: float                  # allowed seconds from submission
     arrival: float                # submission time
     request: Optional[Request] = None   # token counts (batched serving)
+    tenant: str = ""              # traffic class (``TenantSpec.name``)
 
 
 def exec_time(entry, queries: int) -> float:
@@ -50,21 +59,23 @@ def exec_time(entry, queries: int) -> float:
 def exec_time_distribution(cd: ConfigDict, queries: int = DEFAULT_QUERIES,
                            engine: Optional[str] = None) -> np.ndarray:
     """Execution times across all configurations and workers (paper §5.1)."""
-    pre, qps = _dist_arrays(cd, engine)
+    pre, qps, _ = _dist_arrays(cd, engine)
     return pre + queries / qps
 
 
 def _dist_arrays(cd: ConfigDict, engine: Optional[str]):
-    # (preproc, qps) vectors over the feasible DSE table rows, cached on the
-    # ConfigDict: workload generators call this once per *job* at fleet
-    # scale, so the per-call table scan has to go.
+    # (preproc, qps, decode_frac) vectors over the feasible DSE table rows,
+    # cached on the ConfigDict: workload generators call this once per
+    # *job* at fleet scale, so the per-call table scan has to go.
     cache = cd.__dict__.setdefault("_dist_cache", {})
     arr = cache.get(engine)
     if arr is None:
         ents = [e for e in cd.table
                 if e.qps > 0 and (engine is None or e.engine == engine)]
         arr = cache[engine] = (np.array([e.preproc_s for e in ents]),
-                               np.array([e.qps for e in ents]))
+                               np.array([e.qps for e in ents]),
+                               np.clip([e.decode_frac for e in ents],
+                                       0.05, 0.95))
     return arr
 
 
@@ -75,6 +86,25 @@ def qos_threshold(cd: ConfigDict, engine: str, queries: int,
     generalized to arbitrary job sizes for the fleet-scale workloads)."""
     return float(np.percentile(exec_time_distribution(cd, queries, engine),
                                pct))
+
+
+def streaming_threshold(cd: ConfigDict, engine: str, queries: int,
+                        pct: float, engines=None):
+    """(ttft_s, tpot_s): streaming-QoS analogue of ``qos_threshold``.
+
+    The pct-percentile, over the engine's feasible configurations, of the
+    solo prefill-prefix time (``preproc + (q/qps) * (1 - decode_frac)`` —
+    the time to the first decoded token when served alone) and of the
+    per-output-token decode time (``decode_frac / (qps * decode_len)``,
+    independent of the job size).  Workload generators scale these into
+    per-class TTFT/TPOT deadlines (``TenantSpec.ttft_scale`` /
+    ``tpot_scale``); like ``t_qos``, the thresholds cover service only, so
+    queueing eats into the same budget."""
+    engines = engines or default_engines()
+    pre, qps, df = _dist_arrays(cd, engine)
+    ttft = np.percentile(pre + (queries / qps) * (1.0 - df), pct)
+    tpot = np.percentile(df / (qps * engines[engine].decode_len), pct)
+    return float(ttft), float(tpot)
 
 
 def make_experiment(cd: ConfigDict, demand: str, freq: str,

@@ -1,5 +1,7 @@
 """Evaluation metrics (paper §5.1): violations, waiting, end-to-end,
-excess time, tail latency, scheduling overhead, energy, placement."""
+excess time, tail latency, scheduling overhead, energy, placement — plus
+the streaming-QoS view (TTFT/TPOT averages, tails and deadline misses)
+and per-tenant breakdowns."""
 
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ def summarize(results: Sequence[JobResult]) -> Dict[str, float]:
     excess = np.array([r.excess for r in results])
     overhead = np.array([r.overhead_s + r.decision_s for r in results])
     violated = np.array([r.violated for r in results])
-    return {
+    out = {
         "jobs": len(results),
         "violations": int(violated.sum()),
         "e2e_avg_s": float(e2e.mean()),
@@ -30,7 +32,32 @@ def summarize(results: Sequence[JobResult]) -> Dict[str, float]:
         "overhead_median_s": float(np.median(overhead)),
         "overhead_max_s": float(overhead.max()),
         "overhead_p99_s": float(np.percentile(overhead, 99)),
+        # streaming QoS: deadline misses count even where the metric
+        # itself is NaN-guarded away (a NaN never violates)
+        "ttft_violations": sum(r.ttft_violated for r in results),
+        "tpot_violations": sum(r.tpot_violated for r in results),
     }
+    ttft = np.array([r.ttft for r in results])
+    tpot = np.array([r.tpot for r in results])
+    if np.isfinite(ttft).any():
+        t = ttft[np.isfinite(ttft)]
+        out["ttft_avg_s"] = float(t.mean())
+        out["ttft_p99_s"] = float(np.percentile(t, 99))
+    if np.isfinite(tpot).any():
+        t = tpot[np.isfinite(tpot)]
+        out["tpot_avg_s"] = float(t.mean())
+        out["tpot_p99_s"] = float(np.percentile(t, 99))
+    return out
+
+
+def summarize_by_tenant(results: Sequence[JobResult]
+                        ) -> Dict[str, Dict[str, float]]:
+    """Per-traffic-class ``summarize`` keyed by ``Job.tenant`` (jobs from
+    hand-built lists land under ``""``)."""
+    groups: Dict[str, List[JobResult]] = {}
+    for r in results:
+        groups.setdefault(r.job.tenant, []).append(r)
+    return {name: summarize(rs) for name, rs in sorted(groups.items())}
 
 
 def placement(results: Sequence[JobResult]) -> Dict[str, float]:

@@ -24,6 +24,15 @@ by ``Cluster.depth_penalty`` (joining a batch of ``b`` members runs
 re-derived from the adjusted times, and eligibility is intersected with
 the bridge's batch-formation rules (same-engine batches under slot/KV
 budgets) via ``Cluster.admit_engine_ok``.
+
+Streaming QoS (``Request.ttft_qos`` / ``tpot_qos``) tightens the gate
+further: acceptability requires the *tighter* of the end-to-end, TTFT and
+TPOT headrooms to survive (``estimator.phase_split_matrices`` supplies the
+prefill/decode split of Eq. 2), and a scarce TTFT budget can become the
+binding urgency.  Under prefill/decode-disaggregated pools
+(``WorkerPool.role``) each phase is placed independently: phase-sliced
+service times, role-gated eligibility.  With no deadlines and no role
+tags every addition is inert and the schedule is unchanged bit-for-bit.
 """
 
 from __future__ import annotations
@@ -32,7 +41,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.estimator import estimate_matrix
+from repro.core.estimator import estimate_matrix, phase_split_matrices
 from repro.core.simulator import Assignment, Cluster, Policy
 
 
@@ -64,7 +73,32 @@ class SynergAI(Policy):
         t = score.t_estimated
         doomed = score.doomed
         acceptable = score.acceptable
+        urgency = score.urgency
         batched = getattr(cluster, "serving", "job") == "batched"
+        disagg = getattr(cluster, "disaggregated", False)
+        reqs = [j.request for j in queue]
+        has_ttft = np.fromiter((r is not None and r.ttft_qos is not None
+                                for r in reqs), dtype=bool, count=len(reqs))
+        has_tpot = np.fromiter((r is not None and r.tpot_qos is not None
+                                for r in reqs), dtype=bool, count=len(reqs))
+        streaming = bool(has_ttft.any() or has_tpot.any())
+        changed = False
+        pen = np.ones(len(workers))
+        phase = np.zeros(len(queue), dtype=np.int8)   # 0 full/1 prefill/2 decode
+        if disagg or streaming:
+            pre_m, dec_m = phase_split_matrices(cluster.cd, queue, workers,
+                                                use_default=False)
+        if disagg:
+            # phase-aware service times: a prefill-phase job costs a
+            # worker only its prefill prefix, a decode-phase job only the
+            # decode remainder (the handoff already happened)
+            phase = np.fromiter(
+                ({"full": 0, "prefill": 1, "decode": 2}[
+                    cluster.phase_of(j)] for j in queue),
+                dtype=np.int8, count=len(queue))
+            t = np.where((phase == 1)[:, None], pre_m,
+                         np.where((phase == 2)[:, None], dec_m, t))
+            changed = True
         if batched:
             # queue-depth-adjusted latency: joining a live batch divides
             # the job's service rate; re-derive Eq. 3/4 from the
@@ -74,11 +108,56 @@ class SynergAI(Policy):
                             for w in workers])
             if (pen != 1.0).any():
                 t = t * pen[None, :]
-                acceptable = score.t_remaining[:, None] >= t
-                doomed = ~acceptable.any(axis=1)
+                changed = True
+        if changed:
+            acceptable = score.t_remaining[:, None] >= t
+        if streaming:
+            # gate on the tighter of (latency, TTFT, TPOT) headroom: a
+            # worker is acceptable only if every deadline the job carries
+            # survives its estimates.  The TTFT budget decays with waiting
+            # like t_remaining; TPOT is a pure rate constraint.  A decode-
+            # phase job's TTFT is already history, a prefill-phase job's
+            # TPOT belongs to its later decode placement.
+            from repro.core.engines import engine_catalogue
+            engines = engine_catalogue()
+            wait = np.fromiter((now - j.arrival for j in queue),
+                               dtype=np.float64, count=len(queue))
+            ttft_qos = np.array([r.ttft_qos if r is not None and
+                                 r.ttft_qos is not None else np.inf
+                                 for r in reqs])
+            tpot_qos = np.array([r.tpot_qos if r is not None and
+                                 r.tpot_qos is not None else np.inf
+                                 for r in reqs])
+            # per-token rate uses the engine-default token count (dec_m
+            # is the profile-shape decode time, so the ratio is exactly
+            # the simulator's solo decode_frac/(qps*decode_len) — the
+            # sampled Request length cancels out of a per-token metric)
+            dtok = np.array([float(j.queries * engines[j.engine].decode_len)
+                             if j.engine in engines
+                             else (float(r.decode_tokens)
+                                   if r is not None and r.decode_tokens > 0
+                                   else np.inf)
+                             for j, r in zip(queue, reqs)])
+            ttft_rem = ttft_qos - wait
+            ttft_est = pre_m * pen[None, :]
+            tpot_est = dec_m * pen[None, :] / dtok[:, None]
+            ok_ttft = ((~has_ttft | (phase == 2))[:, None]
+                       | (ttft_est <= ttft_rem[:, None]))
+            ok_tpot = ((~has_tpot | (phase == 1))[:, None]
+                       | (tpot_est <= tpot_qos[:, None]))
+            acceptable = acceptable & ok_ttft & ok_tpot
+            # a tight TTFT can be the binding urgency even when the e2e
+            # budget is comfortable
+            with np.errstate(invalid="ignore"):
+                ttft_slack = ttft_rem - np.min(ttft_est, axis=1)
+            urgency = np.where(has_ttft & (phase != 2),
+                               np.minimum(urgency, ttft_slack), urgency)
+            changed = True
+        if changed:
+            doomed = ~acceptable.any(axis=1)
         # order: urgent first (2D Ordered Job Queue); doomed jobs last.
         # lexsort is stable, so ties keep queue order like sorted() did.
-        order = np.lexsort((score.urgency, doomed))
+        order = np.lexsort((urgency, doomed))
         # per-job candidate cost + eligibility (the sorted (w, c*) list):
         # non-doomed jobs walk their *acceptable* workers by T_estimated;
         # doomed jobs minimize expected completion (wait + exec) over all
@@ -97,12 +176,15 @@ class SynergAI(Policy):
             elig = acceptable
         if batched:
             # batch-formation rules: a live batch only admits its own
-            # engine, under the slot and KV-cache budgets
-            emask = {e: np.fromiter((cluster.admit_engine_ok(e, w, now)
-                                     for w in workers), dtype=bool,
-                                    count=len(workers))
-                     for e in {j.engine for j in queue}}
-            elig = elig & np.stack([emask[j.engine] for j in queue])
+            # engine, under the slot and KV-cache budgets — and, under
+            # disaggregated pools, the phase-role match
+            keys = {(j.engine, cluster.phase_of(j)) for j in queue}
+            emask = {k: np.fromiter(
+                (cluster.admit_engine_ok(k[0], w, now, phase=k[1])
+                 for w in workers), dtype=bool, count=len(workers))
+                for k in keys}
+            elig = elig & np.stack(
+                [emask[(j.engine, cluster.phase_of(j))] for j in queue])
         ranked = np.where(elig, cost, np.inf)
         # jobs with no eligible idle worker can never place this round
         live = np.isfinite(ranked[:, avail]).any(axis=1)

@@ -38,7 +38,11 @@ The simulator re-estimates every member's completion on each batch change
 and feeds the new times through the event heap; schedulers see the batch
 through ``Cluster.depth_penalty`` (queue-depth-adjusted latency,
 ``1 + alpha * b`` for joining a batch of ``b``) and ``Cluster.admit_ok``
-(same-engine / slot / KV eligibility).
+(same-engine / slot / KV eligibility — and, under prefill/decode-
+disaggregated pools, the phase-role match).  The prefill/decode split
+also powers the streaming-QoS view (per-request TTFT/TPOT with
+``Request.ttft_qos`` / ``tpot_qos`` deadlines) and the disaggregated
+handoff cost (``kv_transfer_s``); design note ``docs/serving_bridge.md``.
 """
 
 from __future__ import annotations
@@ -61,6 +65,13 @@ from repro.core.workers import WorkerPool
 BATCH_ALPHA = {"memory": 0.15, "collective": 0.35, "compute": 0.6}
 DEFAULT_ALPHA = 0.5
 
+# prefill->decode KV handoff link for disaggregated pools (pool roles in
+# ``repro.core.workers.WorkerPool.role``): an edge<->cloud datacenter link,
+# far slower than on-package HBM but wide enough that steady-state cache
+# streaming overlaps decode.
+DISAGG_XFER_GBPS = 10e9        # bytes/s
+DISAGG_XFER_LAT_S = 0.005      # one-way link latency
+
 
 def batch_multiplier(alpha: float, b: int) -> float:
     """Per-member service-rate multiplier at batch size ``b`` (solo = 1)."""
@@ -82,10 +93,22 @@ def default_request(spec: EngineSpec, queries: int) -> Request:
 _profile = functools.lru_cache(maxsize=None)(profile_engine)
 
 
-def _decode_frac(entry: Entry) -> float:
+def decode_fraction(entry: Entry) -> float:
     """Entry.decode_frac clamped away from 0/1 so both token rates stay
     finite (degenerate all-prefill / all-decode profiles)."""
     return min(max(entry.decode_frac, 0.05), 0.95)
+
+
+def prefill_prefix(entry: Entry, queries: int) -> float:
+    """Solo seconds to the first decoded token for ``queries`` queries at
+    the engine-default token counts: the admission + prefill share of
+    ``exec_time``.  The single scalar source for every TTFT estimate
+    (job-mode metrics, speculation, SLO-MAEL planning); the vectorized
+    counterparts are ``job.streaming_threshold`` and
+    ``estimator.phase_split_matrices``."""
+    full = exec_time(entry, queries)
+    return min(full, entry.preproc_s + (queries / entry.qps)
+               * (1.0 - decode_fraction(entry)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,7 +132,7 @@ def batch_profile(entry: Entry, spec: EngineSpec,
     check in ``repro.core.perfmodel.estimate`` (weights + caches + 20%
     activation headroom must fit the replica's HBM).
     """
-    df = _decode_frac(entry)
+    df = decode_fraction(entry)
     prefill_rate = spec.prefill_len * entry.qps / (1.0 - df)
     decode_rate = spec.decode_len * entry.qps / df
     prof = _profile(spec)
@@ -136,12 +159,24 @@ def solo_service(entry: Entry, prof: BatchProfile,
     service time through the calibrated rates.
     """
     if request is None:
-        work = exec_time(entry, queries)
-        prefill = (entry.preproc_s
-                   + (queries / entry.qps) * (1.0 - _decode_frac(entry)))
-        return work, min(prefill, work)
+        return exec_time(entry, queries), prefill_prefix(entry, queries)
     prefill = entry.preproc_s + request.prompt_tokens / prof.prefill_rate
     return prefill + request.decode_tokens / prof.decode_rate, prefill
+
+
+def kv_transfer_s(prof: BatchProfile) -> float:
+    """Prefill -> decode handoff delay for one job under disaggregated
+    pools: one microbatch KV cache (``prof.kv_job_bytes``, from
+    ``perfmodel.profile_engine``) over the disaggregation link.  That is
+    the pipeline-fill cost — later microbatches stream while earlier ones
+    decode, so the job pays the link once, not per query.
+
+    The staging is push-style: the cache leaves the prefill pool at
+    handoff (freeing its HBM for the next prefill batch — the reason
+    prefill pools turn over fast) *before* the decode placement is known,
+    so every handoff pays the link, including the corner case where a
+    ``role="both"`` pool later wins the decode leg too."""
+    return DISAGG_XFER_LAT_S + prof.kv_job_bytes / DISAGG_XFER_GBPS
 
 
 def batch_stats(cluster) -> Dict[str, Dict[str, float]]:

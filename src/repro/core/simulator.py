@@ -28,6 +28,16 @@ Two serving models share the engine (``Simulator(..., serving=...)``):
   member completions through the event heap.  ``BatchedWorkerSim`` below
   holds the per-worker batch state; the profile math lives in the bridge
   module.
+
+Both modes report *streaming QoS* per request — ``JobResult.ttft``
+(arrival to first decoded token) and ``JobResult.tpot`` (seconds per
+decoded token after it) — and enforce the optional per-job deadlines on
+``Request.ttft_qos`` / ``tpot_qos``.  Batched mode additionally supports
+*prefill/decode-disaggregated pools* (``WorkerPool.role``): jobs run a
+prefill phase on a prefill pool, hand their KV cache over the
+disaggregation link (``serving_bridge.kv_transfer_s``), and re-enter the
+queue as an independently-placed decode phase.  Design note:
+``docs/serving_bridge.md``.
 """
 
 from __future__ import annotations
@@ -70,13 +80,17 @@ class _InFlight:
     ``m(b)`` of the solo rate).  ``prefill_s`` marks the boundary between
     the admission+prefill prefix and the per-token decode phase, matching
     the real engine's prefill-then-decode loop
-    (``repro.serving.engine``)."""
+    (``repro.serving.engine``).  ``prefill_done_at`` is the wall time the
+    member crossed that boundary — the first decoded token, interpolated
+    exactly inside ``accrue`` (the drain rate is constant between batch
+    events) and the source of the per-request TTFT."""
 
     jid: int
     work_s: float
     prefill_s: float
     request: Request
     served_s: float = 0.0
+    prefill_done_at: Optional[float] = None
 
     @property
     def remaining_s(self) -> float:
@@ -135,8 +149,14 @@ class BatchedWorkerSim(WorkerSim):
         if not self.active or dt <= 0:
             return
         m = self.multiplier()
+        t0 = now - dt
         for f in self.active.values():
-            f.served_s = min(f.work_s, f.served_s + dt * m)
+            before = f.served_s
+            f.served_s = min(f.work_s, before + dt * m)
+            if f.prefill_done_at is None and f.served_s >= f.prefill_s:
+                # first token: the drain rate is constant over [t0, now],
+                # so the prefill-boundary crossing interpolates exactly
+                f.prefill_done_at = t0 + (f.prefill_s - before) / m
         self.busy_s += dt
         self.energy_j += self.batch_entry.power_w * dt
 
@@ -152,11 +172,17 @@ class BatchedWorkerSim(WorkerSim):
             self.kv_limit = prof.kv_limit
             self.kv_job_bytes = prof.kv_job_bytes
             self.last_progress = now
-        self.active[jid] = _InFlight(jid, work_s, prefill_s, request)
+        f = _InFlight(jid, work_s, prefill_s, request)
+        if prefill_s <= 0.0:        # decode-only phase: first token is past
+            f.prefill_done_at = now
+        self.active[jid] = f
         self.admitted += 1
         self.peak_batch = max(self.peak_batch, len(self.active))
 
-    def finish(self, jid: int):
+    def finish(self, jid: int) -> Optional[_InFlight]:
+        """Retire a fully-served member; tokens count here and only here,
+        so a member killed by a failure mid-flight contributes nothing
+        (its re-dispatch counts once, wherever it completes)."""
         f = self.active.pop(jid, None)
         if f is not None:
             self.prefill_tokens += f.request.prompt_tokens
@@ -164,6 +190,7 @@ class BatchedWorkerSim(WorkerSim):
         if not self.active:
             self.batch_engine = None
             self.batch_entry = None
+        return f
 
     def on_failure(self, now: float):
         """Worker died: partial service is lost, the batch resets (the
@@ -196,6 +223,18 @@ class JobResult:
     overhead_s: float
     decision_s: float
     speculated: bool = False
+    # streaming QoS (both serving modes): seconds from arrival to the
+    # first decoded token, and average seconds per decoded token after it.
+    # Under disaggregated pools the transfer + decode-queue time lands in
+    # ``tpot`` (TTFT is the prefill pool's first token).  ``violated``
+    # ORs the streaming deadline misses in; with no deadlines set the
+    # *_violated flags stay False and ``violated`` keeps its end-to-end
+    # meaning bit-for-bit.
+    ttft: float = math.nan
+    tpot: float = math.nan
+    ttft_violated: bool = False
+    tpot_violated: bool = False
+    prefill_worker: Optional[str] = None   # disaggregated: prefill pool
 
 
 @dataclasses.dataclass
@@ -215,6 +254,13 @@ class Cluster:
         self._batch_alpha = batch_alpha
         self.workers: Dict[str, WorkerSim] = {
             w.name: self._make_worker(w) for w in (fleet or default_fleet())}
+        # prefill/decode disaggregation (docs/serving_bridge.md): pools
+        # carry a phase role, jobs move through prefill -> decode phases
+        # tracked here (maintained by the simulator); a whole-job cluster
+        # reports phase "full" and gates nothing.
+        self.disaggregated = serving == "batched" and any(
+            ws.pool.role != "both" for ws in self.workers.values())
+        self.job_phase: Dict[int, str] = {}
 
     def _make_worker(self, pool: WorkerPool) -> WorkerSim:
         if self.serving == "batched":
@@ -232,17 +278,42 @@ class Cluster:
 
     # -- serving-bridge views (identical to plain idleness in job mode) ----
 
+    def phase_of(self, job: Job) -> str:
+        """The job's current serving phase: ``"full"`` outside
+        disaggregated clusters; ``"prefill"`` then ``"decode"`` inside one
+        (every job starts at prefill; the simulator advances it)."""
+        if not self.disaggregated:
+            return "full"
+        return self.job_phase.get(job.id, "prefill")
+
+    def role_ok(self, job: Job, worker: str) -> bool:
+        """Pool-role gate: a ``prefill``/``decode`` pool only serves its
+        phase; ``both`` pools serve anything.  Always True outside
+        disaggregated clusters."""
+        if not self.disaggregated:
+            return True
+        role = self.workers[worker].pool.role
+        return role == "both" or role == self.phase_of(job)
+
     def admit_ok(self, job: Job, worker: str, now: float) -> bool:
         """Can ``worker`` start/admit ``job`` right now?  In job mode this
         is plain idleness; in batched mode it adds the bridge's batch
-        formation rules (same engine, free slot, KV headroom)."""
+        formation rules (same engine, free slot, KV headroom) and, under
+        disaggregated pools, the phase-role match."""
+        if not self.role_ok(job, worker):
+            return False
         ws = self.workers[worker]
         if isinstance(ws, BatchedWorkerSim):
             return ws.can_admit(job.engine, now)
         return ws.idle(now)
 
-    def admit_engine_ok(self, engine: str, worker: str, now: float) -> bool:
+    def admit_engine_ok(self, engine: str, worker: str, now: float,
+                        phase: str = "full") -> bool:
         ws = self.workers[worker]
+        if self.disaggregated:
+            role = ws.pool.role
+            if role != "both" and role != phase:
+                return False
         if isinstance(ws, BatchedWorkerSim):
             return ws.can_admit(engine, now)
         return ws.idle(now)
@@ -302,13 +373,28 @@ class Simulator:
                              "with serving='batched' (a batch member has "
                              "no single backup worker)")
         self.serving = serving
-        if serving == "batched":
-            from repro.core.engines import default_engines
-            self._engines = dict(engines or default_engines())
+        # engine shapes are needed in both modes: batched serving derives
+        # token rates from them, job mode uses decode_len for the TTFT/TPOT
+        # streaming metrics
+        from repro.core.engines import default_engines
+        self._engines = dict(engines or default_engines())
         self.cd = cd
         self.policy = policy
         self.cluster = Cluster(cd, fleet, serving=serving,
                                max_batch=max_batch, batch_alpha=batch_alpha)
+        if serving != "batched" and any(
+                ws.pool.role != "both" for ws in
+                self.cluster.workers.values()):
+            raise ValueError(
+                "prefill/decode-disaggregated fleets (WorkerPool.role != "
+                "'both') require serving='batched'")
+        self._disagg = self.cluster.disaggregated
+        # disaggregation state: results parked between prefill completion
+        # and decode dispatch, per-job KV-handoff delays, and the ready
+        # heap of transfers in flight
+        self._between: Dict[int, JobResult] = {}
+        self._xfer_s: Dict[int, float] = {}
+        self._handoff: list = []
         self.tick = tick
         self.failures = sorted(failures, key=lambda f: f.at)
         self.straggler_prob = straggler_prob
@@ -379,6 +465,10 @@ class Simulator:
         failures = list(self.failures)
         self._heap = []
         self._seq = itertools.count()
+        self._between.clear()
+        self._xfer_s.clear()
+        self._handoff = []
+        self.cluster.job_phase.clear()
         for job in pending:
             heapq.heappush(self._heap, (job.arrival, next(self._seq),
                                         _W_ARRIVAL, None))
@@ -394,11 +484,18 @@ class Simulator:
             while len(results) < n_total:
                 guard += 1
                 assert guard < 2_000_000, "simulator livelock"
-                # 1) deliver arrivals
+                # 1) deliver arrivals — and, under disaggregated pools,
+                # jobs whose prefill->decode KV handoff just landed (they
+                # re-enter the queue as decode-phase work, placed
+                # independently of where they prefilled)
                 while pi < len(pending) and (pending[pi].arrival
                                              <= now + 1e-12):
                     job = pending[pi]
                     pi += 1
+                    queue.append(job)
+                    self.policy.on_arrival(job, self.cluster, now)
+                while self._handoff and self._handoff[0][0] <= now + 1e-12:
+                    _, _, job = heapq.heappop(self._handoff)
                     queue.append(job)
                     self.policy.on_arrival(job, self.cluster, now)
                 # 2) worker failures: kill the running job, re-queue it
@@ -414,6 +511,15 @@ class Simulator:
                         if rec.worker == f.worker and rec.end > now:
                             del running[jid]
                             w.busy_until = now
+                            if self._disagg:
+                                # the pool's KV state died with it: the job
+                                # restarts from prefill (a decode-phase
+                                # member re-prefills; partial decode tokens
+                                # are discarded uncounted — ``finish`` never
+                                # saw them)
+                                self.cluster.job_phase[jid] = "prefill"
+                                self._xfer_s.pop(jid, None)
+                                self._between.pop(jid, None)
                             queue.append(rec.job)   # checkpoint-restart
                     if isinstance(w, BatchedWorkerSim):
                         w.on_failure(now)
@@ -425,13 +531,22 @@ class Simulator:
                 rebatch: Dict[str, BatchedWorkerSim] = {}
                 for jid, rec in due:
                     del running[jid]
-                    results.append(rec)
                     w = self.cluster.workers[rec.worker]
                     w.last_freed = rec.end
                     if isinstance(w, BatchedWorkerSim):
                         w.accrue(now)
-                        w.finish(jid)
+                        fin = w.finish(jid)
                         rebatch[rec.worker] = w
+                        if (self._disagg and
+                                self.cluster.phase_of(rec.job)
+                                == "prefill"):
+                            # prefill done: not a completion — hand the KV
+                            # off and re-queue the decode phase
+                            self._handoff_prefill(jid, rec, now,
+                                                  first_attempt)
+                            continue
+                        self._finish_streaming(rec, fin)
+                    results.append(rec)
                 # surviving batch members speed up (fewer sharers):
                 # re-estimate their completions through the heap
                 for w in rebatch.values():
@@ -519,6 +634,16 @@ class Simulator:
             rec.worker = w2
             rec.config = f"{ent2.mode}/r{ent2.chips_per_replica}"
             rec.speculated = True
+            # streaming metrics follow the winning (backup) execution,
+            # which restarts the job from its prefill at ``now``
+            from repro.core.serving_bridge import prefill_prefix
+            base = exec_time(ent2, rec.job.queries)
+            pre = prefill_prefix(ent2, rec.job.queries)
+            first_s = (pre / base) * extra if base > 0 else 0.0
+            rec.ttft = (now - rec.job.arrival) + first_s
+            dtok = self._decode_tokens(rec.job)
+            rec.tpot = (extra - first_s) / dtok if dtok > 0 else math.nan
+            self._apply_stream_deadlines(rec)
             self._notify_end_changed(rec.job.id, end2)
 
     def _elastic(self, now: float, queue: List[Job]):
@@ -585,8 +710,63 @@ class Simulator:
                         exec_s, e2e, e2e > a.job.t_qos,
                         max(0.0, e2e - a.job.t_qos), overhead,
                         decision_time.get(a.job.id, 0.0))
+        self._job_mode_streaming(rec, a.entry, exec_s)
         running[a.job.id] = rec
         self._notify_end_changed(a.job.id, end)
+
+    # ------------------------------------------------------------------
+    # streaming QoS (TTFT / TPOT)
+
+    def _decode_tokens(self, job: Job) -> int:
+        """Decoded-token count behind a job's TPOT: its ``Request``, or
+        the engine-default shape (matching ``default_request``)."""
+        if job.request is not None:
+            return job.request.decode_tokens
+        spec = self._engines.get(job.engine)
+        return job.queries * spec.decode_len if spec is not None else 0
+
+    def _job_mode_streaming(self, rec: JobResult, entry, exec_s: float):
+        """TTFT/TPOT for exclusive job-level service: the profiled
+        prefill share of the (noisy) execution time marks the first
+        token; noise and stragglers stretch both phases alike."""
+        from repro.core.serving_bridge import prefill_prefix
+        job = rec.job
+        base = exec_time(entry, job.queries)
+        pre = prefill_prefix(entry, job.queries)
+        first_s = (pre / base) * exec_s if base > 0 else 0.0
+        rec.ttft = rec.waiting + first_s
+        dtok = self._decode_tokens(job)
+        rec.tpot = (exec_s - first_s) / dtok if dtok > 0 else math.nan
+        self._apply_stream_deadlines(rec)
+
+    def _apply_stream_deadlines(self, rec: JobResult):
+        """Fold TTFT/TPOT deadline misses into the violation flags (NaN
+        metrics never violate; jobs without deadlines are untouched)."""
+        req = rec.job.request
+        if req is None:
+            return
+        rec.ttft_violated = (req.ttft_qos is not None
+                             and rec.ttft > req.ttft_qos)
+        rec.tpot_violated = (req.tpot_qos is not None
+                             and rec.tpot > req.tpot_qos)
+        if rec.ttft_violated or rec.tpot_violated:
+            rec.violated = True
+
+    def _finish_streaming(self, rec: JobResult, fin: Optional[_InFlight]):
+        """Final streaming metrics for a completed batched job.  Under
+        disaggregation ``rec.ttft`` was pinned at prefill handoff and the
+        transfer + decode-queue time lands in TPOT; otherwise the first
+        token is the member's interpolated prefill crossing."""
+        if fin is not None:
+            if not math.isnan(rec.ttft):      # disaggregated: set at handoff
+                first = rec.job.arrival + rec.ttft
+            else:
+                first = (fin.prefill_done_at
+                         if fin.prefill_done_at is not None else rec.end)
+                rec.ttft = first - rec.job.arrival
+            dtok = self._decode_tokens(rec.job)
+            rec.tpot = ((rec.end - first) / dtok if dtok > 0 else math.nan)
+        self._apply_stream_deadlines(rec)
 
     # ------------------------------------------------------------------
     # serving bridge (serving="batched"): continuous-batching service
@@ -596,17 +776,31 @@ class Simulator:
                        decision_time):
         from repro.core.serving_bridge import (batch_profile,
                                                default_request,
-                                               solo_service)
-        if not w.can_admit(a.job.engine, now):
-            # the policy raced the batch-formation rules (engine mismatch
-            # or KV/slot budget); the job stays queued for the next round
+                                               kv_transfer_s, solo_service)
+        if (not w.can_admit(a.job.engine, now)
+                or not self.cluster.role_ok(a.job, a.worker)):
+            # the policy raced the batch-formation rules (engine mismatch,
+            # KV/slot budget, or phase-role); the job stays queued
             first_attempt.setdefault(a.job.id, now)
             return
         queue.remove(a.job)
+        phase = (self.cluster.job_phase.get(a.job.id, "prefill")
+                 if self._disagg else "full")
         spec = self._engines[a.job.engine]
         prof = batch_profile(a.entry, spec, w.pool)
         req = a.job.request
         work, prefill = solo_service(a.entry, prof, req, a.job.queries)
+        full_req = req or default_request(spec, a.job.queries)
+        if phase == "prefill":
+            # prefill-only slice of the service (preproc + prompt pass);
+            # the member's first token *is* its phase completion
+            work = prefill
+            track_req = Request(full_req.prompt_tokens, 0)
+        elif phase == "decode":
+            work, prefill = work - prefill, 0.0
+            track_req = Request(0, full_req.decode_tokens)
+        else:
+            track_req = full_req
         # the same noise model as job-level serving, in the same op order
         # (forcing max_batch=1 reproduces job mode bit-for-bit)
         work *= w.slowdown
@@ -620,24 +814,62 @@ class Simulator:
             work *= self.straggler_factor
             prefill *= self.straggler_factor
         w.accrue(now)
-        w.admit(now, a.job.id, a.job.engine, a.entry, prof,
-                req or default_request(spec, a.job.queries), work, prefill)
+        w.admit(now, a.job.id, a.job.engine, a.entry, prof, track_req,
+                work, prefill)
         w.last_assigned = now
         w.n_jobs += 1
         start = now
         end = start + work
-        waiting = start - a.job.arrival
-        e2e = end - a.job.arrival
-        overhead = now - first_attempt.get(a.job.id, now)
-        rec = JobResult(a.job, a.worker, f"{a.entry.mode}/r"
-                        f"{a.entry.chips_per_replica}", start, end, waiting,
-                        work, e2e, e2e > a.job.t_qos,
-                        max(0.0, e2e - a.job.t_qos), overhead,
-                        decision_time.get(a.job.id, 0.0))
+        config = f"{a.entry.mode}/r{a.entry.chips_per_replica}"
+        if phase == "decode":
+            # second leg of a disaggregated job: extend the record opened
+            # at prefill (exec_s spans prefill start -> decode end, i.e.
+            # it includes the KV transfer and any decode queueing).  The
+            # handoff cleared this job's first_attempt entry, so blocked
+            # decode attempts and decode-round decisions accumulate on
+            # top of the prefill leg's overhead.
+            rec = self._between.pop(a.job.id)
+            rec.worker = a.worker
+            rec.config = config
+            rec.end = end
+            rec.exec_s = end - rec.start
+            rec.e2e = end - a.job.arrival
+            rec.violated = rec.e2e > a.job.t_qos
+            rec.excess = max(0.0, rec.e2e - a.job.t_qos)
+            rec.overhead_s += now - first_attempt.get(a.job.id, now)
+            rec.decision_s = decision_time.get(a.job.id, 0.0)
+        else:
+            waiting = start - a.job.arrival
+            e2e = end - a.job.arrival
+            overhead = now - first_attempt.get(a.job.id, now)
+            rec = JobResult(a.job, a.worker, config, start, end, waiting,
+                            work, e2e, e2e > a.job.t_qos,
+                            max(0.0, e2e - a.job.t_qos), overhead,
+                            decision_time.get(a.job.id, 0.0))
+            if phase == "prefill":
+                self._xfer_s[a.job.id] = kv_transfer_s(prof)
         running[a.job.id] = rec
         self._notify_end_changed(a.job.id, end)
         # joining slows the whole batch down: re-estimate everyone
         self._rebatch(w, now, running)
+
+    def _handoff_prefill(self, jid: int, rec: JobResult, now: float,
+                         first_attempt: Dict[int, float]):
+        """Prefill phase of a disaggregated job finished: record TTFT
+        (the prefill pool produced the first token), ship the KV cache,
+        and re-queue the decode phase once the transfer lands.  The
+        job's blocked-attempt clock restarts so the decode leg's
+        scheduling overhead accrues on top of the prefill leg's."""
+        first_attempt.pop(jid, None)
+        rec.ttft = rec.end - rec.job.arrival
+        rec.prefill_worker = rec.worker
+        self.cluster.job_phase[jid] = "decode"
+        self._between[jid] = rec
+        ready = now + self._xfer_s.pop(jid, 0.0)
+        heapq.heappush(self._handoff, (ready, next(self._seq), rec.job))
+        if self._heap is not None:
+            heapq.heappush(self._heap, (ready, next(self._seq),
+                                        _W_ARRIVAL, None))
 
     def _rebatch(self, w: BatchedWorkerSim, now: float,
                  running: Dict[int, JobResult]):

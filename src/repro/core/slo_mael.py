@@ -26,10 +26,37 @@ class SloMael(Policy):
         self.mapping: Dict[int, str] = {}        # job id -> worker
         self.worker_fifo: Dict[str, List[int]] = {}
 
+    @staticmethod
+    def _phase_exec(ent, job, phase: str):
+        """(exec_s, prefill_s) of the phase being placed, with the
+        worker's default configuration: the full service outside
+        disaggregated clusters, the prefill prefix or decode remainder of
+        it inside one."""
+        from repro.core.serving_bridge import prefill_prefix
+        full = ent.preproc_s + job.queries / ent.qps
+        prefill = prefill_prefix(ent, job.queries)
+        if phase == "prefill":
+            return prefill, prefill
+        if phase == "decode":
+            return full - prefill, 0.0
+        return full, prefill
+
     def on_arrival(self, job, cluster: Cluster, now: float):
         best_w, best_score, best_ok = None, math.inf, False
         t_rem = job.t_qos
+        req = job.request
+        phase = cluster.phase_of(job)
+        if req is not None and req.tpot_qos is not None:
+            # per-token rate over the engine-default token count: the
+            # profile-shape decode seconds and the sampled Request length
+            # would otherwise disagree on what "per token" means
+            from repro.core.engines import engine_catalogue
+            spec = engine_catalogue().get(job.engine)
+            dtok = (job.queries * spec.decode_len if spec is not None
+                    else req.decode_tokens)
         for w, ws in cluster.workers.items():
+            if not cluster.role_ok(job, w):
+                continue    # disaggregated: wrong-phase pool
             ent = cluster.cd.default_entry(job.engine, w)
             if ent is None or ent.qps <= 0:
                 continue
@@ -41,9 +68,20 @@ class SloMael(Policy):
             # batch runs 1 + alpha*b slower); 1.0 in job mode.
             wait = max(0.0, self.backlog.get(w, 0.0) - now)
             pen = cluster.depth_penalty(w, now)
-            exp_latency = wait + pen * (ent.preproc_s
-                                        + job.queries / ent.qps)
+            exec_s, prefill_s = self._phase_exec(ent, job, phase)
+            exp_latency = wait + pen * exec_s
             ok = exp_latency <= t_rem
+            # streaming SLOs: the plan must clear every deadline the job
+            # carries — the tighter of (latency, TTFT, TPOT) headroom
+            if req is not None and req.ttft_qos is not None \
+                    and phase != "decode":
+                exp_ttft = (now - job.arrival) + wait + pen * prefill_s
+                ok = ok and exp_ttft <= req.ttft_qos
+            if (req is not None and req.tpot_qos is not None
+                    and phase != "prefill" and dtok > 0):
+                decode_s = exec_s - (prefill_s if phase != "decode"
+                                     else 0.0)
+                ok = ok and pen * decode_s / dtok <= req.tpot_qos
             # prefer SLO-satisfying mappings; break ties by expected latency
             if (ok and not best_ok) or (
                     ok == best_ok and exp_latency < best_score):
@@ -52,7 +90,7 @@ class SloMael(Policy):
             return
         self.mapping[job.id] = best_w
         ent = cluster.cd.default_entry(job.engine, best_w)
-        exec_s = ent.preproc_s + job.queries / ent.qps
+        exec_s, _ = self._phase_exec(ent, job, phase)
         base = max(cluster.workers[best_w].busy_until,
                    self.backlog.get(best_w, now), now)
         self.backlog[best_w] = base + exec_s

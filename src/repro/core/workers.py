@@ -26,6 +26,11 @@ class WorkerPool:
     chip_flops: float = PEAK_FLOPS_BF16   # per-chip bf16 peak
     chip_hbm_bw: float = HBM_BW
     chip_hbm_bytes: float = HBM_BYTES
+    # phase specialization under the disaggregated serving bridge
+    # (docs/serving_bridge.md): "both" serves whole jobs (and either phase
+    # in a disaggregated cluster); "prefill"/"decode" pools only admit that
+    # phase.  Requires ``Simulator(..., serving="batched")``.
+    role: str = "both"
 
     @property
     def default_mode(self) -> OperatingMode:
@@ -55,7 +60,8 @@ def default_fleet() -> List[WorkerPool]:
 
 
 def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
-                n_edge_small: int = 1) -> List[WorkerPool]:
+                n_edge_small: int = 1,
+                disaggregate=False) -> List[WorkerPool]:
     """Synthetic fleet: replicate the three profiled pool archetypes.
 
     Replica k > 0 of an archetype is named ``<archetype>__<k+1>`` so it
@@ -63,14 +69,31 @@ def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
     ``ConfigDict.optimal``, which strips the ``__`` suffix): a single
     ``characterize()`` over the 3-pool default fleet drives simulations of
     any fleet size — e.g. ``synth_fleet(8, 28, 28)`` is a 64-pool cluster.
+
+    ``disaggregate`` tags replicas for prefill/decode-disaggregated
+    serving (``serving="batched"`` only): within each archetype a
+    ``prefill``-only share of the replicas (``True`` → 25%, or pass a
+    float fraction; at least one when the archetype has ≥ 2 replicas —
+    prefill is the short, compute-hot phase) and the rest ``decode``-only.
+    Splitting *within* each archetype keeps every engine feasible in both
+    phases.  Singleton archetypes stay ``role="both"`` so no engine loses
+    a phase.  For explicit placements (e.g. cloud-archetype prefill +
+    edge-archetype decode) build the fleet manually and set
+    ``dataclasses.replace(pool, role=...)``.
     """
     assert n_cloud + n_edge_large + n_edge_small > 0, "empty fleet"
+    prefill_frac = 0.25 if disaggregate is True else float(disaggregate)
     out: List[WorkerPool] = []
     counts = (n_cloud, n_edge_large, n_edge_small)
     for pool, n in zip(default_fleet(), counts):
+        n_prefill = (min(n - 1, max(1, round(prefill_frac * n)))
+                     if n >= 2 else 0)
         for k in range(n):
             name = pool.name if k == 0 else f"{pool.name}__{k + 1}"
-            out.append(dataclasses.replace(pool, name=name))
+            role = "both"
+            if disaggregate and n >= 2:
+                role = "prefill" if k < n_prefill else "decode"
+            out.append(dataclasses.replace(pool, name=name, role=role))
     return out
 
 

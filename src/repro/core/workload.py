@@ -19,7 +19,10 @@ the ``synth_fleet`` clusters are built for:
 * ``attach_requests``      — token-level ``Request`` annotations (prompt /
   decode token counts, Pareto-sampled around each engine's profiled
   per-query shape) for the batched serving bridge; every preset also runs
-  token-level via ``scenario(..., serving="batched")``.
+  token-level via ``scenario(..., serving="batched")``.  Tenants with
+  ``ttft_scale`` / ``tpot_scale`` additionally get per-class streaming
+  SLOs (``Request.ttft_qos`` / ``tpot_qos``;
+  ``scenario(..., streaming=...)`` is the all-tenants shorthand).
 * ``synth_failures``       — Poisson worker failures / exponential repair.
 """
 
@@ -33,7 +36,7 @@ import numpy as np
 from repro.core.configdict import ConfigDict
 from repro.core.engines import default_engines
 from repro.core.job import (DEFAULT_QUERIES, Job, Request, exec_time,
-                            qos_threshold)
+                            qos_threshold, streaming_threshold)
 from repro.core.simulator import FailureEvent
 from repro.core.workers import WorkerPool
 
@@ -204,7 +207,14 @@ class TenantSpec:
     """One traffic class: its own arrival process, engine subset (with
     optional mix weights), size distribution and QoS tightness (percentile
     per paper §5.1: DL=50, DH=25; ``qos_scale`` loosens/tightens the
-    budget)."""
+    budget).
+
+    ``ttft_scale`` / ``tpot_scale`` add per-class *streaming* SLOs
+    (``Request.ttft_qos`` / ``tpot_qos``, set by ``attach_requests``):
+    each job's deadline is the scale times its engine's
+    ``streaming_threshold`` at ``qos_percentile``.  ``None`` (default)
+    emits no streaming deadline; batched serving is required to meet (or
+    even observe) one."""
 
     name: str
     arrivals: ArrivalProcess
@@ -215,6 +225,8 @@ class TenantSpec:
     qos_percentile: float = 50.0
     qos_scale: float = 1.0
     start_at: float = 0.0
+    ttft_scale: Optional[float] = None    # x streaming_threshold ttft
+    tpot_scale: Optional[float] = None    # x streaming_threshold tpot
 
 
 def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
@@ -236,7 +248,8 @@ def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
             engine = names[int(ei)]
             t_qos = tenant.qos_scale * qos_threshold(
                 cd, engine, int(q), tenant.qos_percentile)
-            jobs.append(Job(0, engine, int(q), float(t_qos), float(at)))
+            jobs.append(Job(0, engine, int(q), float(t_qos), float(at),
+                            tenant=tenant.name))
     jobs.sort(key=lambda j: j.arrival)
     for i, j in enumerate(jobs):
         j.id = i
@@ -248,7 +261,9 @@ def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
 
 
 def attach_requests(jobs: Sequence[Job], engines=None, seed: int = 0,
-                    alpha: float = 2.5) -> Sequence[Job]:
+                    alpha: float = 2.5, cd: Optional[ConfigDict] = None,
+                    tenants: Optional[Sequence[TenantSpec]] = None
+                    ) -> Sequence[Job]:
     """Annotate jobs with token-level ``Request``s for the serving bridge.
 
     Per-query prompt and decode lengths are Pareto-sampled (via the
@@ -257,8 +272,20 @@ def attach_requests(jobs: Sequence[Job], engines=None, seed: int = 0,
     profiled length, so the aggregate load matches the job-level
     calibration while individual jobs spread over a heavy-tailed range.
     Jobs are mutated in place (and returned for convenience).
+
+    ``tenants`` + ``cd`` additionally stamp per-class streaming SLOs:
+    a job whose ``Job.tenant`` names a spec with ``ttft_scale`` /
+    ``tpot_scale`` gets ``Request.ttft_qos`` / ``tpot_qos`` set to the
+    scale times its engine's ``streaming_threshold`` at the tenant's
+    ``qos_percentile`` (the same construction as ``t_qos``).
     """
     engines = engines or default_engines()
+    by_tenant = {t.name: t for t in (tenants or ())}
+    if cd is None and any(t.ttft_scale is not None
+                          or t.tpot_scale is not None
+                          for t in by_tenant.values()):
+        raise ValueError("streaming deadlines (ttft_scale/tpot_scale) "
+                         "need the ConfigDict: pass cd=...")
     rng = np.random.default_rng(seed)
     by_engine: dict = {}
     for i, j in enumerate(jobs):
@@ -271,10 +298,26 @@ def attach_requests(jobs: Sequence[Job], engines=None, seed: int = 0,
                             6 * spec.decode_len)
         prompts = p_dist.sample(rng, len(idx))
         decodes = d_dist.sample(rng, len(idx))
+        thresholds: dict = {}      # (engine, queries, pct) -> (ttft, tpot)
         for i, p, d in zip(idx, prompts, decodes):
             job = jobs[i]
+            ttft_qos = tpot_qos = None
+            ts = by_tenant.get(job.tenant)
+            if ts is not None and (ts.ttft_scale is not None
+                                   or ts.tpot_scale is not None):
+                key = (job.engine, job.queries, ts.qos_percentile)
+                if key not in thresholds:
+                    thresholds[key] = streaming_threshold(
+                        cd, job.engine, job.queries, ts.qos_percentile,
+                        engines)
+                ttft_t, tpot_t = thresholds[key]
+                if ts.ttft_scale is not None:
+                    ttft_qos = ts.ttft_scale * ttft_t
+                if ts.tpot_scale is not None:
+                    tpot_qos = ts.tpot_scale * tpot_t
             job.request = Request(int(job.queries * p),
-                                  int(job.queries * d))
+                                  int(job.queries * d),
+                                  ttft_qos, tpot_qos)
     return jobs
 
 
@@ -348,7 +391,8 @@ def _mix(cd, fleet, engines):
 def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
              fleet: Optional[Sequence[WorkerPool]] = None,
              utilization: float = 0.7, seed: int = 0,
-             serving: str = "job") -> List[Job]:
+             serving: str = "job",
+             streaming=None) -> List[Job]:
     """Named fleet-scale scenarios over the engine catalogue, calibrated to
     ``utilization`` of the given fleet (default: the 3-pool paper fleet).
 
@@ -356,10 +400,17 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
     annotations (see ``attach_requests``) so the trace drives the
     continuous-batching serving bridge — pair it with
     ``Simulator(..., serving="batched")``.
+
+    ``streaming=(ttft_scale, tpot_scale)`` stamps every tenant with those
+    streaming-SLO scales (per-class control wants explicit ``TenantSpec``
+    + ``make_workload`` + ``attach_requests``); batched serving only.
     """
     if serving not in ("job", "batched"):
         raise ValueError(f"serving must be 'job' or 'batched', "
                          f"got {serving!r}")
+    if streaming is not None and serving != "batched":
+        raise ValueError("streaming TTFT/TPOT deadlines ride on the "
+                         "token-level Request: use serving='batched'")
     from repro.core.workers import default_fleet
     fleet = list(fleet or default_fleet())
     engines, weights = _mix(cd, fleet, list(default_engines()))
@@ -421,9 +472,14 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
         ]
     else:
         raise ValueError(f"unknown scenario {kind!r}; one of {SCENARIOS}")
+    if streaming is not None:
+        ttft_scale, tpot_scale = streaming
+        tenants = [dataclasses.replace(t, ttft_scale=ttft_scale,
+                                       tpot_scale=tpot_scale)
+                   for t in tenants]
     jobs = make_workload(cd, tenants, seed=seed)
     if serving == "batched":
-        attach_requests(jobs, seed=seed)
+        attach_requests(jobs, seed=seed, cd=cd, tenants=tenants)
     return jobs
 
 

@@ -1,0 +1,172 @@
+"""Property-based serving-bridge invariants (hypothesis; guarded by the
+conftest import shim so the suite collects and the seeded fallback tests
+still run when hypothesis isn't installed).
+
+Invariants:
+  * batch formation never exceeds the max-batch / KV-cache budgets;
+  * m(b) is monotone decreasing in b while b * m(b) is increasing;
+  * TTFT <= end-to-end latency, TPOT >= 0;
+  * forced ``max_batch=1`` equals job mode bit-for-bit under random
+    workloads (the bridge's semantics anchor).
+
+Each property lives in a plain ``_check_*`` helper: hypothesis drives it
+over drawn inputs in CI, and a deterministic parametrized test drives it
+over pinned seeds everywhere (so tier-1 keeps the coverage even without
+hypothesis)."""
+
+import functools
+
+import pytest
+from conftest import given, settings, st
+
+from repro.core.baselines import RoundRobin
+from repro.core.constants import OperatingMode
+from repro.core.engines import default_engines
+from repro.core.job import Job
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.serving_bridge import (batch_multiplier, batch_profile,
+                                       batch_throughput)
+from repro.core.simulator import BatchedWorkerSim, Simulator
+from repro.core.workers import WorkerPool, synth_fleet
+from repro.core.workload import scenario
+
+
+@functools.lru_cache(maxsize=None)
+def _cd():
+    # session-style cache that doesn't tangle pytest fixtures with @given
+    return characterize()
+
+
+def _result_key(results):
+    return [(r.job.id, r.worker, r.config, r.start, r.end, r.waiting,
+             r.exec_s, r.e2e, r.violated, r.excess, r.overhead_s)
+            for r in results]
+
+
+# ----------------------------------------------------------------------------
+# the properties
+
+def _check_multiplier_monotone(alpha: float, b_max: int):
+    ms = [batch_multiplier(alpha, b) for b in range(1, b_max + 1)]
+    ts = [batch_throughput(alpha, b) for b in range(1, b_max + 1)]
+    assert ms[0] == 1.0
+    assert all(0 < m <= 1.0 for m in ms)
+    assert all(a >= b for a, b in zip(ms, ms[1:]))      # members slow down
+    assert all(a <= b for a, b in zip(ts, ts[1:]))      # batch speeds up
+    if alpha > 0:
+        assert all(a > b for a, b in zip(ms, ms[1:]))
+
+
+def _check_budgets_and_streaming(seed: int, kind: str, max_batch: int,
+                                 utilization: float):
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(cd, kind, n_jobs=80, fleet=fleet, seed=seed,
+                    utilization=utilization, serving="batched")
+    sim = Simulator(cd, SynergAI(), fleet=fleet, seed=seed,
+                    serving="batched", max_batch=max_batch)
+    res = sim.run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    for ws in sim.cluster.workers.values():
+        assert isinstance(ws, BatchedWorkerSim)
+        assert ws.peak_batch <= max_batch          # slot budget held
+        assert not ws.active                       # everything drained
+    for r in res:
+        assert 0.0 < r.ttft <= r.e2e + 1e-9        # first token comes first
+        assert r.tpot >= 0.0
+        assert r.start >= r.job.arrival - 1e-9
+
+
+def _check_kv_budget(n_jobs: int, queries: int):
+    """A pool sized for ~2.5 microbatch caches can never batch above 2,
+    whatever the workload shape."""
+    from repro.core.offline import characterize as char
+    from repro.core.perfmodel import profile_engine
+    spec = default_engines()["gemma-2b/bf16"]
+    prof = profile_engine(spec)
+    hbm = 1.2 * (prof.weights_bytes + 2.5 * prof.kv_bytes) / 0.9
+    pool = WorkerPool("tiny", 1, (OperatingMode("m", 1.0, 1, 1000.0),),
+                      (1, 1), True, chip_hbm_bytes=hbm)
+    cd = char({spec.name: spec}, [pool])
+    ent = cd.optimal(spec.name, "tiny")
+    assert batch_profile(ent, spec, pool).kv_limit == 2
+    jobs = [Job(i, spec.name, queries, 1e6, 0.0) for i in range(n_jobs)]
+    sim = Simulator(cd, SynergAI(), fleet=[pool], serving="batched",
+                    max_batch=8, exec_noise=0.0)
+    res = sim.run(jobs)
+    assert len(res) == n_jobs
+    ws = sim.cluster.workers["tiny"]
+    assert ws.peak_batch <= 2                      # KV budget held
+
+
+def _check_batch1_equals_job_mode(seed: int, kind: str,
+                                  utilization: float, policy_cls):
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(cd, kind, n_jobs=60, fleet=fleet, seed=seed,
+                    utilization=utilization)
+    a = Simulator(cd, policy_cls(), fleet=fleet, seed=seed).run(jobs)
+    b = Simulator(cd, policy_cls(), fleet=fleet, seed=seed,
+                  serving="batched", max_batch=1).run(jobs)
+    assert _result_key(a) == _result_key(b)
+
+
+# ----------------------------------------------------------------------------
+# hypothesis drivers (skip cleanly without the library)
+
+@settings(max_examples=25, deadline=None)
+@given(alpha=st.floats(0.0, 1.0), b_max=st.integers(2, 64))
+def test_prop_multiplier_monotone(alpha, b_max):
+    _check_multiplier_monotone(alpha, b_max)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "mmpp", "flash"]),
+       max_batch=st.integers(1, 12),
+       utilization=st.floats(0.5, 1.6))
+def test_prop_budgets_and_streaming(seed, kind, max_batch, utilization):
+    _check_budgets_and_streaming(seed, kind, max_batch, utilization)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n_jobs=st.integers(2, 10), queries=st.integers(100, 2000))
+def test_prop_kv_budget(n_jobs, queries):
+    _check_kv_budget(n_jobs, queries)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "mmpp", "flash"]),
+       utilization=st.floats(0.5, 1.6))
+def test_prop_batch1_equals_job_mode(seed, kind, utilization):
+    _check_batch1_equals_job_mode(seed, kind, utilization, SynergAI)
+
+
+# ----------------------------------------------------------------------------
+# seeded fallbacks: the same properties, pinned inputs, always run
+
+@pytest.mark.parametrize("alpha,b_max", [(0.0, 8), (0.15, 16), (1.0, 32)])
+def test_multiplier_monotone_seeded(alpha, b_max):
+    _check_multiplier_monotone(alpha, b_max)
+
+
+@pytest.mark.parametrize("seed,kind,max_batch,utilization", [
+    (13, "mmpp", 4, 1.4),
+    (29, "flash", 8, 0.9),
+])
+def test_budgets_and_streaming_seeded(seed, kind, max_batch, utilization):
+    _check_budgets_and_streaming(seed, kind, max_batch, utilization)
+
+
+def test_kv_budget_seeded():
+    _check_kv_budget(7, 700)
+
+
+@pytest.mark.parametrize("seed,kind,policy_cls", [
+    (17, "mmpp", SynergAI),
+    (23, "poisson", RoundRobin),
+])
+def test_batch1_equals_job_mode_seeded(seed, kind, policy_cls):
+    _check_batch1_equals_job_mode(seed, kind, 1.2, policy_cls)

@@ -1,0 +1,397 @@
+"""Streaming QoS (TTFT/TPOT) + prefill/decode-disaggregated pools.
+
+Covers the PR's acceptance anchors: the batched simulator with no
+streaming deadlines and no disaggregation reproduces the pre-streaming
+(PR 2) results bit-for-bit (golden digest), per-request TTFT/TPOT values
+are pinned on a tiny seed-pinned scenario so event-heap refactors cannot
+silently shift streaming numbers, failures mid-prefill re-dispatch
+without double-counting decode tokens, and ``bench_streaming``'s
+disaggregated fleet beats the aggregated one on TTFT violations under
+the mmpp overload preset."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import RoundRobin
+from repro.core.engines import default_engines
+from repro.core.job import Job, Request, streaming_threshold
+from repro.core.metrics import summarize, summarize_by_tenant
+from repro.core.scheduler import SynergAI
+from repro.core.serving_bridge import (batch_profile, batch_stats,
+                                       kv_transfer_s, solo_service)
+from repro.core.simulator import FailureEvent, Simulator
+from repro.core.slo_mael import SloMael
+from repro.core.workers import synth_fleet
+from repro.core.workload import (PoissonArrivals, TenantSpec,
+                                 attach_requests, make_workload, scenario)
+
+ENGINE = "gemma-2b/bf16"
+
+
+# ----------------------------------------------------------------------------
+# golden digests: PR 2 reproduction + pinned streaming numbers
+
+# Captured from the pre-streaming serving bridge (PR 2 code) on
+# scenario(mmpp, n_jobs=40, synth_fleet(1, 2, 2), seed=7, utilization=1.2,
+# serving="batched") under SynergAI, seed=7: (id, worker, start, end,
+# exec_s, violated).  The streaming/disaggregation machinery must leave
+# every one of these bit-level intact when no deadlines are set and
+# disaggregation is off.
+PR2_GOLDEN = [
+    (0, 'cloud-pod', 11.300764261041577, 17.570153136205573,
+     6.269388875163997, False),
+    (3, 'edge-large__2', 29.711197567719314, 33.96497085060364,
+     4.2537732828843255, False),
+    (14, 'edge-large', 162.11386962619943, 233.37023248539643,
+     71.256362859197, False),
+    (22, 'cloud-pod', 192.66509001339668, 197.2729017708007,
+     4.607811757404022, False),
+    (31, 'edge-small', 193.8175910790733, 200.5086758612955,
+     6.691084782222191, False),
+    (39, 'cloud-pod', 209.81748451162554, 215.80883106828557,
+     5.991346556660032, False),
+]
+
+# Per-request (ttft, tpot) on scenario(poisson, n_jobs=12,
+# synth_fleet(1, 1, 1), seed=11, utilization=1.0, serving="batched")
+# under SynergAI, seed=11.
+STREAM_GOLDEN = [
+    (0, 1.282354669002056, 3.542578364441039e-05),
+    (1, 2.9592339144720947, 0.00015592907759862386),
+    (2, 1.9254544833942653, 3.1262542695471705e-05),
+    (3, 1.8797090695006702, 0.0001095340832446187),
+    (4, 4.208632470252402, 3.810724351115139e-05),
+    (5, 1.2696845805506527, 2.972844108969736e-05),
+    (6, 1.7388397034083773, 7.368236800886053e-05),
+    (7, 1.6181216483347818, 2.4197844486390866e-05),
+    (8, 2.2665180078563125, 0.00012469447267886904),
+    (9, 1.288530958038244, 2.795324589033711e-05),
+    (10, 8.94623761649482, 7.762049841819115e-05),
+    (11, 9.957773879416635, 0.00017934001456500084),
+]
+
+
+def test_pr2_batched_results_reproduced_bitforbit(configdict):
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=40, fleet=fleet, seed=7,
+                    utilization=1.2, serving="batched")
+    res = {r.job.id: r for r in
+           Simulator(configdict, SynergAI(), fleet=fleet, seed=7,
+                     serving="batched").run(jobs)}
+    assert len(res) == 40
+    for jid, worker, start, end, exec_s, violated in PR2_GOLDEN:
+        r = res[jid]
+        assert r.worker == worker
+        assert r.start == pytest.approx(start, rel=1e-9)
+        assert r.end == pytest.approx(end, rel=1e-9)
+        assert r.exec_s == pytest.approx(exec_s, rel=1e-9)
+        assert r.violated == violated
+        # no deadlines -> streaming flags are inert
+        assert not r.ttft_violated and not r.tpot_violated
+        assert r.prefill_worker is None
+
+
+def test_golden_ttft_tpot_values(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    jobs = scenario(configdict, "poisson", n_jobs=12, fleet=fleet,
+                    seed=11, utilization=1.0, serving="batched")
+    res = {r.job.id: r for r in
+           Simulator(configdict, SynergAI(), fleet=fleet, seed=11,
+                     serving="batched").run(jobs)}
+    for jid, ttft, tpot in STREAM_GOLDEN:
+        assert res[jid].ttft == pytest.approx(ttft, rel=1e-9), jid
+        assert res[jid].tpot == pytest.approx(tpot, rel=1e-9), jid
+
+
+# ----------------------------------------------------------------------------
+# metrics: both serving modes, invariants, summarize
+
+@pytest.mark.parametrize("serving", ["job", "batched"])
+def test_ttft_bounded_by_latency_both_modes(configdict, serving):
+    fleet = synth_fleet(2, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=200, fleet=fleet, seed=5,
+                    utilization=1.1, serving=serving)
+    res = Simulator(configdict, SynergAI(), fleet=fleet, seed=5,
+                    serving=serving).run(jobs)
+    assert len(res) == len(jobs)
+    for r in res:
+        assert 0.0 < r.ttft <= r.e2e + 1e-9
+        assert math.isnan(r.tpot) or r.tpot >= 0.0
+    s = summarize(res)
+    assert s["ttft_violations"] == 0 and s["tpot_violations"] == 0
+    assert 0.0 < s["ttft_avg_s"] <= s["ttft_p99_s"]
+    assert 0.0 < s["tpot_avg_s"]
+
+
+def test_job_mode_ttft_is_prefill_share(configdict):
+    # solo job, no noise: TTFT is exactly the profiled prefill prefix
+    job = Job(0, ENGINE, 1000, 1e6, 0.0)
+    sim = Simulator(configdict, SynergAI(), exec_noise=0.0)
+    r = sim.run([job])[0]
+    ent = configdict.optimal(ENGINE, r.worker)
+    spec = default_engines()[ENGINE]
+    pool = [w for w in sim.cluster.workers.values()
+            if w.pool.name == r.worker][0].pool
+    prof = batch_profile(ent, spec, pool)
+    _, prefill = solo_service(ent, prof, None, 1000)
+    assert r.ttft == pytest.approx(prefill, rel=1e-9)
+    assert r.tpot == pytest.approx((r.exec_s - prefill)
+                                   / (1000 * spec.decode_len), rel=1e-9)
+
+
+def test_streaming_threshold_shape(configdict):
+    ttft50, tpot50 = streaming_threshold(configdict, ENGINE, 1000, 50.0)
+    ttft25, tpot25 = streaming_threshold(configdict, ENGINE, 1000, 25.0)
+    assert 0 < ttft25 <= ttft50     # tighter percentile, tighter budget
+    assert 0 < tpot25 <= tpot50
+    from repro.core.job import qos_threshold
+    assert ttft50 < qos_threshold(configdict, ENGINE, 1000, 50.0)
+
+
+# ----------------------------------------------------------------------------
+# deadlines: attachment + scheduler gating
+
+def test_tenant_scales_attach_deadlines(configdict):
+    chat = TenantSpec("chat", PoissonArrivals(0.5), 30, engines=(ENGINE,),
+                      qos_percentile=25.0, ttft_scale=2.0, tpot_scale=3.0)
+    batch = TenantSpec("batch", PoissonArrivals(0.2), 20,
+                       engines=(ENGINE,))
+    jobs = make_workload(configdict, [chat, batch], seed=0)
+    attach_requests(jobs, seed=0, cd=configdict, tenants=[chat, batch])
+    ttft_t, tpot_t = streaming_threshold(configdict, ENGINE, 1000, 25.0)
+    for j in jobs:
+        if j.tenant == "chat":
+            assert j.request.ttft_qos == pytest.approx(2.0 * ttft_t)
+            assert j.request.tpot_qos == pytest.approx(3.0 * tpot_t)
+        else:
+            assert j.request.ttft_qos is None
+            assert j.request.tpot_qos is None
+
+
+def test_attach_requests_streaming_needs_cd(configdict):
+    chat = TenantSpec("chat", PoissonArrivals(0.5), 5, engines=(ENGINE,),
+                      ttft_scale=2.0)
+    jobs = make_workload(configdict, [chat], seed=0)
+    with pytest.raises(ValueError):
+        attach_requests(jobs, seed=0, tenants=[chat])
+
+
+def test_scenario_streaming_knob(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    jobs = scenario(configdict, "multi-tenant", n_jobs=60, fleet=fleet,
+                    seed=2, serving="batched", streaming=(1.5, 2.0))
+    assert all(j.request.ttft_qos > 0 and j.request.tpot_qos > 0
+               for j in jobs)
+    assert all(j.tenant for j in jobs)
+    with pytest.raises(ValueError):     # deadlines need token requests
+        scenario(configdict, "mmpp", n_jobs=10, serving="job",
+                 streaming=(1.5, 2.0))
+
+
+def test_deadline_violations_flagged_and_gated(configdict):
+    spec = default_engines()[ENGINE]
+    req_tight = Request(1000 * spec.prefill_len, 1000 * spec.decode_len,
+                        ttft_qos=1e-6, tpot_qos=1e-12)   # unmeetable
+    req_loose = Request(1000 * spec.prefill_len, 1000 * spec.decode_len,
+                        ttft_qos=1e6, tpot_qos=1e3)
+    for req, expect in ((req_tight, True), (req_loose, False)):
+        job = Job(0, ENGINE, 1000, 1e6, 0.0, request=req)
+        res = Simulator(configdict, SynergAI(), exec_noise=0.0,
+                        serving="batched").run([job])
+        r = res[0]
+        assert r.ttft_violated == expect
+        assert r.tpot_violated == expect
+        assert r.violated == expect     # e2e budget itself is huge
+
+
+def test_slo_mael_respects_streaming_deadlines(configdict):
+    # two workers; the TTFT deadline sits between their default-config
+    # prefill prefixes -> SLO-MAEL must plan onto the only pool that
+    # meets it (without the deadline it is free to pick either)
+    from repro.core.serving_bridge import prefill_prefix
+    fleet = synth_fleet(1, 1, 0)
+    spec = default_engines()[ENGINE]
+    prefills = {w.name: prefill_prefix(
+        configdict.default_entry(ENGINE, w.name), 1000) for w in fleet}
+    assert len(set(prefills.values())) == 2
+    ttft_qos = float(np.mean(list(prefills.values())))
+    req = Request(1000 * spec.prefill_len, 1000 * spec.decode_len,
+                  ttft_qos=ttft_qos)
+    job = Job(0, ENGINE, 1000, 1e6, 0.0, request=req)
+    sim = Simulator(configdict, SloMael(), fleet=fleet, exec_noise=0.0,
+                    serving="batched")
+    r = sim.run([job])[0]
+    assert r.worker == min(prefills, key=prefills.get)
+    assert prefills[r.worker] <= req.ttft_qos
+
+
+# ----------------------------------------------------------------------------
+# disaggregated pools
+
+def test_synth_fleet_roles():
+    fleet = synth_fleet(2, 5, 5, disaggregate=True)
+    roles = {w.name: w.role for w in fleet}
+    assert set(roles.values()) == {"prefill", "decode"}
+    by_arch = {}
+    for w in fleet:
+        by_arch.setdefault(w.name.split("__")[0], []).append(w.role)
+    for arch, rs in by_arch.items():    # both phases inside each archetype
+        assert "prefill" in rs and "decode" in rs, arch
+    # singleton archetypes keep role "both" (no engine loses a phase)
+    assert all(w.role == "both"
+               for w in synth_fleet(1, 1, 1, disaggregate=True))
+    # plain fleets are untouched
+    assert all(w.role == "both" for w in synth_fleet(2, 5, 5))
+
+
+def test_disaggregated_requires_batched(configdict):
+    fleet = synth_fleet(2, 2, 2, disaggregate=True)
+    with pytest.raises(ValueError):
+        Simulator(configdict, SynergAI(), fleet=fleet)   # job mode
+
+
+@pytest.mark.parametrize("policy_cls", [SynergAI, SloMael, RoundRobin])
+def test_disaggregated_phases_and_conservation(configdict, policy_cls):
+    fleet = synth_fleet(2, 3, 3, disaggregate=True)
+    jobs = scenario(configdict, "mmpp", n_jobs=120, fleet=fleet, seed=3,
+                    utilization=1.0, serving="batched",
+                    streaming=(2.0, 2.5))
+    sim = Simulator(configdict, policy_cls(), fleet=fleet, seed=3,
+                    serving="batched")
+    res = sim.run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    for r in res:
+        assert r.prefill_worker is not None          # two-phase lifecycle
+        assert sim.cluster.workers[r.prefill_worker].pool.role in (
+            "prefill", "both")
+        assert sim.cluster.workers[r.worker].pool.role in ("decode",
+                                                           "both")
+        assert 0 < r.ttft <= r.e2e + 1e-9
+        assert math.isfinite(r.tpot) and r.tpot > 0
+    st = batch_stats(sim.cluster)
+    # exact token conservation across the phase split
+    assert (sum(v["prefill_tokens"] for v in st.values())
+            == sum(j.request.prompt_tokens for j in jobs))
+    assert (sum(v["decoded_tokens"] for v in st.values())
+            == sum(j.request.decode_tokens for j in jobs))
+    # role purity: prefill pools never decode and vice versa
+    for name, v in st.items():
+        role = sim.cluster.workers[name].pool.role
+        if role == "prefill":
+            assert v["decoded_tokens"] == 0
+        if role == "decode":
+            assert v["prefill_tokens"] == 0
+
+
+def test_kv_transfer_delays_decode(configdict):
+    """A lone disaggregated job's end-to-end time is exactly prefill +
+    transfer + decode: no queueing, no batching, no noise."""
+    spec = default_engines()[ENGINE]
+    fleet = synth_fleet(2, 0, 0, disaggregate=True)
+    assert [w.role for w in fleet] == ["prefill", "decode"]
+    job = Job(0, ENGINE, 800, 1e6, 0.0,
+              request=Request(800 * spec.prefill_len,
+                              800 * spec.decode_len))
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, exec_noise=0.0,
+                    serving="batched")
+    r = sim.run([job])[0]
+    ent = configdict.optimal(ENGINE, "cloud-pod")
+    prof = batch_profile(ent, spec, fleet[0])
+    work, prefill = solo_service(ent, prof, job.request, 800)
+    assert r.ttft == pytest.approx(prefill, rel=1e-9)
+    assert r.prefill_worker == "cloud-pod" and r.worker == "cloud-pod__2"
+    assert r.e2e == pytest.approx(prefill + kv_transfer_s(prof)
+                                  + (work - prefill), rel=1e-9)
+    assert r.tpot == pytest.approx((r.e2e - r.ttft)
+                                   / job.request.decode_tokens, rel=1e-9)
+
+
+def test_failure_mid_prefill_no_double_count(configdict):
+    """A worker failure mid-prefill re-queues the job; its tokens are
+    counted exactly once, wherever the retry lands (the synth_failures /
+    elastic interaction gap from the issue)."""
+    spec = default_engines()[ENGINE]
+    pool = synth_fleet(1, 0, 0)
+    req = Request(500 * spec.prefill_len, 500 * spec.decode_len)
+    job = Job(0, ENGINE, 500, 1e6, 0.0, request=req)
+    ent = configdict.optimal(ENGINE, pool[0].name)
+    prof = batch_profile(ent, spec, pool[0])
+    _, prefill = solo_service(ent, prof, req, 500)
+    fail = FailureEvent(pool[0].name, 0.5 * prefill, 10.0)  # mid-prefill
+    sim = Simulator(configdict, SynergAI(), fleet=pool, exec_noise=0.0,
+                    serving="batched", failures=[fail])
+    r = sim.run([job])[0]
+    ws = sim.cluster.workers[pool[0].name]
+    assert r.end > fail.at + fail.duration       # served after recovery
+    assert ws.prefill_tokens == req.prompt_tokens     # once, not twice
+    assert ws.decoded_tokens == req.decode_tokens
+    assert ws.admitted == 2                      # but it was admitted twice
+
+
+def test_disagg_failure_mid_prefill_restarts_once_counted(configdict):
+    """Disaggregated variant: prefill-pool failure mid-prefill restarts
+    the prefill phase; decode tokens land exactly once on a decode
+    pool."""
+    spec = default_engines()[ENGINE]
+    fleet = synth_fleet(2, 0, 0, disaggregate=True)
+    req = Request(500 * spec.prefill_len, 500 * spec.decode_len)
+    job = Job(0, ENGINE, 500, 1e6, 0.0, request=req)
+    ent = configdict.optimal(ENGINE, "cloud-pod")
+    prof = batch_profile(ent, spec, fleet[0])
+    _, prefill = solo_service(ent, prof, req, 500)
+    fail = FailureEvent("cloud-pod", 0.5 * prefill, 5.0)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, exec_noise=0.0,
+                    serving="batched", failures=[fail])
+    r = sim.run([job])[0]
+    pre_ws = sim.cluster.workers["cloud-pod"]
+    dec_ws = sim.cluster.workers["cloud-pod__2"]
+    assert pre_ws.prefill_tokens == req.prompt_tokens
+    assert pre_ws.decoded_tokens == 0
+    assert dec_ws.decoded_tokens == req.decode_tokens
+    assert dec_ws.prefill_tokens == 0
+    assert r.ttft >= fail.at + fail.duration     # prefill restarted
+
+
+def test_summarize_by_tenant_groups(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    jobs = scenario(configdict, "multi-tenant", n_jobs=90, fleet=fleet,
+                    seed=4, serving="batched")
+    res = Simulator(configdict, SynergAI(), fleet=fleet, seed=4,
+                    serving="batched").run(jobs)
+    per = summarize_by_tenant(res)
+    assert set(per) == {j.tenant for j in jobs}
+    assert sum(s["jobs"] for s in per.values()) == len(res)
+
+
+# ----------------------------------------------------------------------------
+# the acceptance bench: disaggregation cuts TTFT violations
+
+def _bench_streaming():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from scheduler_experiments import bench_streaming
+    return bench_streaming
+
+
+def test_bench_streaming_disagg_beats_agg_on_ttft(configdict):
+    bench_streaming = _bench_streaming()
+    out = bench_streaming(configdict, emit=lambda *_: None)
+    agg = out[("aggregated", "SynergAI")]
+    dis = out[("disaggregated", "SynergAI")]
+    assert agg["ttft_violations"] > 0          # overload actually bites
+    assert dis["ttft_violations"] < agg["ttft_violations"]
+
+
+@pytest.mark.slow
+def test_bench_streaming_slow_acceptance(configdict):
+    bench_streaming = _bench_streaming()
+    out = bench_streaming(configdict, n_jobs=4000, pools=(3, 8, 8),
+                          emit=lambda *_: None)
+    agg = out[("aggregated", "SynergAI")]
+    dis = out[("disaggregated", "SynergAI")]
+    assert dis["ttft_violations"] < agg["ttft_violations"]
+    assert dis["ttft_p99_s"] < agg["ttft_p99_s"]
