@@ -13,13 +13,16 @@ Prints ``name,...`` CSV lines.  Sections:
 Fleet-scale entry points (not run here; each has its own CLI):
   benchmarks/scheduler_experiments.py   10k-job x 64-pool scenarios under
       every policy, old-vs-new simulator wall clock, numpy-vs-Pallas
-      scoring, and the job-level vs batched serving-bridge comparison
-      (--jobs/--pools/--kind, --skip-* flags)
-  examples/fleet_scale.py               64-pool demo over all five
-      scenario presets (--serving {job,batched} selects the service
+      scoring, the job-level vs batched serving-bridge comparison, and
+      the trace-driven bench_traces (replay / drift / correlated-region
+      outage) (--jobs/--pools/--kind, --skip-* flags)
+  examples/fleet_scale.py               64-pool demo over every
+      scenario preset (--serving {job,batched} selects the service
       model; scenario(..., serving="batched") token-level requests)
   examples/serve_bridge.py              serving-bridge demo with
       per-pool batch stats (docs/serving_bridge.md)
+  examples/replay_trace.py              trace export/replay bit-for-bit,
+      engine-popularity drift, correlated regional outages
 """
 
 from __future__ import annotations

@@ -17,6 +17,14 @@ fleet-scale benches:
   (``synth_fleet(..., disaggregate=...)``).  Headline: disaggregation
   cuts TTFT violations (prefill pools turn over fast; decodes can't camp
   on them) at the cost of TPOT pressure on the shrunken decode side.
+* ``bench_traces`` — the trace-driven scenario subsystem: every policy on
+  (a) a *replayed* mmpp overload trace (exported with ``save_trace``,
+  fed back through ``replay`` — the SynergAI replay is checked
+  bit-for-bit against the exporting run), (b) engine-popularity *drift*
+  (``scenario(kind="drift")``: the offline-calibrated mix goes stale
+  mid-trace), and (c) a *correlated-region outage*
+  (``synth_failures(regions=..., correlation=...)``: a sampled fraction
+  of a region's pools goes down simultaneously).
 
 Run standalone:  PYTHONPATH=src python benchmarks/scheduler_experiments.py
 (see --help for the fleet/scoring/serving knobs; ``--json`` dumps the
@@ -268,6 +276,79 @@ def bench_streaming(cd=None, n_jobs=1500, pools=(2, 5, 5),
     return out
 
 
+def bench_traces(cd=None, n_jobs=1500, pools=(2, 5, 5), utilization=1.3,
+                 n_regions=3, correlation=0.6, emit=print):
+    """The trace-driven scenarios under every policy: a replayed mmpp
+    overload trace (bit-for-bit against the exporting run), engine-
+    popularity drift, and a correlated multi-region outage."""
+    import os
+    import tempfile
+
+    from repro.core.simulator import Simulator
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import (replay, save_trace, scenario,
+                                     synth_failures)
+
+    cd = cd or characterize()
+    fleet = synth_fleet(*pools, regions=n_regions)
+    out = {}
+
+    def sweep(section, jobs, failures=()):
+        for P in POLICIES:
+            t0 = time.perf_counter()
+            res = Simulator(cd, P(), fleet=fleet, failures=failures,
+                            seed=0).run(jobs)
+            dt = time.perf_counter() - t0
+            s = summarize(res)
+            out[(section, P.name)] = s
+            emit(f"traces,{section},{P.name},"
+                 f"violations={s['violations']},"
+                 f"wait_s={s['waiting_avg_s']:.1f},"
+                 f"p99_s={s['e2e_p99_s']:.1f},wall_s={dt:.2f}")
+
+    # (a) replay: export a completed run, feed it back, pin equality
+    jobs = scenario(cd, "mmpp", n_jobs=n_jobs, fleet=fleet,
+                    utilization=utilization, seed=0)
+    base = Simulator(cd, SynergAI(), fleet=fleet, seed=0).run(jobs)
+    fd, path = tempfile.mkstemp(suffix=".jsonl", prefix="synergai_trace_")
+    os.close(fd)
+    try:
+        save_trace(path, base)
+        replayed = replay(path)
+        res_r = Simulator(cd, SynergAI(), fleet=fleet, seed=0).run(replayed)
+        key = lambda rs: sorted((r.job.id, r.worker, r.start, r.end,
+                                 r.ttft, r.tpot) for r in rs)
+        exact = key(base) == key(res_r)
+        out[("replay", "exact")] = {"replay_exact": exact,
+                                    "records": len(replayed)}
+        emit(f"traces,replay,exact={exact},records={len(replayed)}")
+        sweep("replay", replayed)
+    finally:
+        os.unlink(path)
+
+    # (b) drift: the capacity-proportional mix flips edge<->heavy shares
+    drift_jobs = scenario(cd, "drift", n_jobs=n_jobs, fleet=fleet,
+                          utilization=utilization, seed=0)
+    sweep("drift", drift_jobs)
+
+    # (c) correlated-region outage on the replayed trace's timeline
+    span = jobs[-1].arrival
+    failures = synth_failures(fleet, span, mtbf_s=span, mttr_s=180.0,
+                              seed=0, regions=True,
+                              correlation=correlation)
+    emit(f"traces,outage,regions={n_regions},correlation={correlation},"
+         f"failure_events={len(failures)}")
+    sweep("outage", jobs, failures=failures)
+
+    v = lambda section, name: out[(section, name)]["violations"]
+    base_names = ["RR", "SRR", "LRU", "MRU", "BE"]
+    for section in ("replay", "drift", "outage"):
+        v_base = np.mean([v(section, n) for n in base_names])
+        emit(f"traces_headline,{section},baselines_over_synergai="
+             f"{v_base / max(1, v(section, 'SynergAI')):.2f}x")
+    return out
+
+
 def main(argv=None):
     import argparse
     p = argparse.ArgumentParser(
@@ -290,6 +371,9 @@ def main(argv=None):
     p.add_argument("--skip-streaming", action="store_true",
                    help="skip the streaming-QoS aggregated vs "
                         "disaggregated comparison (bench_streaming)")
+    p.add_argument("--skip-traces", action="store_true",
+                   help="skip the trace-driven scenarios (replay / "
+                        "drift / correlated-region outage, bench_traces)")
     p.add_argument("--skip-fleet", action="store_true",
                    help="skip the fleet-scale bench_fleet run")
     p.add_argument("--json", metavar="PATH", default=None,
@@ -310,6 +394,9 @@ def main(argv=None):
     if not args.skip_streaming:
         print("# streaming QoS: aggregated vs disaggregated pools")
         blob["streaming"] = bench_streaming(cd)
+    if not args.skip_traces:
+        print("# trace-driven scenarios: replay / drift / region outage")
+        blob["traces"] = bench_traces(cd)
     if not args.skip_fleet:
         print(f"# fleet scale ({args.kind})")
         bench_fleet(cd, n_jobs=args.jobs, pools=tuple(args.pools),

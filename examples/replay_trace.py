@@ -1,0 +1,95 @@
+"""Trace replay demo: export a completed run as a JSON-lines serving
+trace, replay it bit-for-bit, then stress the same fleet with the two
+scenario axes that make recorded traffic interesting again:
+
+* **replay** — ``save_trace`` writes every job (arrival, engine, token
+  counts, tenant, QoS budgets) at full float precision;
+  ``replay(path)`` feeds it back through the event heap and reproduces
+  the original ``JobResult`` stream exactly (same fleet / policy /
+  simulator seed).  Recorded production traffic becomes a regression
+  benchmark.
+* **drift** — ``scenario(kind="drift")``: engine popularity migrates
+  from the edge-friendly mix the offline phase calibrated for onto the
+  heavyweights (``DriftedArrivals``), so the scheduler's profiled
+  expectations go stale mid-trace.
+* **correlated outage** — ``synth_failures(regions=True, correlation=)``
+  downs a sampled fraction of a region's pools simultaneously
+  (shared-infrastructure failures), instead of independent single-pool
+  blips.
+
+    PYTHONPATH=src python examples/replay_trace.py [--jobs 1500]
+        [--utilization 1.3] [--regions 3] [--correlation 0.6]
+"""
+
+import argparse
+import os
+import tempfile
+import time
+
+from repro.core.metrics import summarize
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import Simulator
+from repro.core.workers import synth_fleet
+from repro.core.workload import replay, save_trace, scenario, synth_failures
+
+parser = argparse.ArgumentParser(
+    description=__doc__,
+    formatter_class=argparse.RawDescriptionHelpFormatter)
+parser.add_argument("--jobs", type=int, default=1500)
+parser.add_argument("--pools", type=int, nargs=3, default=(2, 5, 5),
+                    metavar=("CLOUD", "EDGE_LG", "EDGE_SM"))
+parser.add_argument("--utilization", type=float, default=1.3)
+parser.add_argument("--regions", type=int, default=3,
+                    help="region count for the correlated-outage run")
+parser.add_argument("--correlation", type=float, default=0.6,
+                    help="fraction of a region downed per outage event")
+parser.add_argument("--trace", default=None,
+                    help="replay this trace file instead of generating "
+                         "(and exporting) an mmpp overload trace")
+args = parser.parse_args()
+
+cd = characterize()
+fleet = synth_fleet(*args.pools, regions=args.regions)
+
+
+def run(jobs, failures=(), label=""):
+    t0 = time.perf_counter()
+    res = Simulator(cd, SynergAI(), fleet=fleet, failures=failures,
+                    seed=0).run(jobs)
+    s = summarize(res)
+    print(f"{label:18s} violations={s['violations']:5d} "
+          f"wait={s['waiting_avg_s']:7.1f}s p99={s['e2e_p99_s']:7.1f}s "
+          f"wall={time.perf_counter() - t0:4.1f}s")
+    return res
+
+
+if args.trace:
+    jobs = replay(args.trace)
+    print(f"replaying {len(jobs)} jobs from {args.trace}\n")
+    run(jobs, label="replay")
+else:
+    jobs = scenario(cd, "mmpp", n_jobs=args.jobs, fleet=fleet,
+                    utilization=args.utilization, seed=0)
+    base = run(jobs, label="recorded run")
+    fd, path = tempfile.mkstemp(suffix=".jsonl", prefix="synergai_mmpp_")
+    os.close(fd)
+    n = save_trace(path, base)                    # export the *run*
+    replayed = run(replay(path), label="replayed trace")
+    key = lambda rs: sorted((r.job.id, r.worker, r.start, r.end)
+                            for r in rs)
+    print(f"{'':18s} exported {n} records -> {path}; "
+          f"bit-for-bit: {key(base) == key(replayed)}\n")
+
+    # the same fleet under engine-popularity drift
+    run(scenario(cd, "drift", n_jobs=args.jobs, fleet=fleet,
+                 utilization=args.utilization, seed=0), label="drift")
+
+    # ... and under a correlated regional outage
+    span = jobs[-1].arrival
+    failures = synth_failures(fleet, span, mtbf_s=span, mttr_s=180.0,
+                              seed=0, regions=True,
+                              correlation=args.correlation)
+    outages = len({f.at for f in failures})
+    run(jobs, failures=failures,
+        label=f"{outages} region outages")

@@ -171,11 +171,13 @@ def kv_transfer_s(prof: BatchProfile) -> float:
     the pipeline-fill cost — later microbatches stream while earlier ones
     decode, so the job pays the link once, not per query.
 
-    The staging is push-style: the cache leaves the prefill pool at
-    handoff (freeing its HBM for the next prefill batch — the reason
-    prefill pools turn over fast) *before* the decode placement is known,
-    so every handoff pays the link, including the corner case where a
-    ``role="both"`` pool later wins the decode leg too."""
+    The staging is *pull-style*: the cache is parked on the prefill pool
+    until the decode placement is known, and the decode pool pulls it at
+    admission — so a decode leg that lands back on the same
+    ``role="both"`` pool pays nothing (the cache never moves), and a
+    prefill-pool failure before the pull loses the parked cache (the job
+    re-prefills).  The simulator charges this delay as the head of the
+    decode member's service."""
     return DISAGG_XFER_LAT_S + prof.kv_job_bytes / DISAGG_XFER_GBPS
 
 

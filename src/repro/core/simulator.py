@@ -34,10 +34,11 @@ Both modes report *streaming QoS* per request — ``JobResult.ttft``
 decoded token after it) — and enforce the optional per-job deadlines on
 ``Request.ttft_qos`` / ``tpot_qos``.  Batched mode additionally supports
 *prefill/decode-disaggregated pools* (``WorkerPool.role``): jobs run a
-prefill phase on a prefill pool, hand their KV cache over the
-disaggregation link (``serving_bridge.kv_transfer_s``), and re-enter the
-queue as an independently-placed decode phase.  Design note:
-``docs/serving_bridge.md``.
+prefill phase on a prefill pool, re-enter the queue as an
+independently-placed decode phase, and pull their parked KV cache over
+the disaggregation link (``serving_bridge.kv_transfer_s``) at decode
+admission — free when the decode leg lands back on the same
+``role="both"`` pool.  Design note: ``docs/serving_bridge.md``.
 """
 
 from __future__ import annotations
@@ -390,8 +391,8 @@ class Simulator:
                 "'both') require serving='batched'")
         self._disagg = self.cluster.disaggregated
         # disaggregation state: results parked between prefill completion
-        # and decode dispatch, per-job KV-handoff delays, and the ready
-        # heap of transfers in flight
+        # and decode dispatch, per-job KV-pull delays (charged at decode
+        # admission), and the heap of decode legs awaiting re-queue
         self._between: Dict[int, JobResult] = {}
         self._xfer_s: Dict[int, float] = {}
         self._handoff: list = []
@@ -484,18 +485,11 @@ class Simulator:
             while len(results) < n_total:
                 guard += 1
                 assert guard < 2_000_000, "simulator livelock"
-                # 1) deliver arrivals — and, under disaggregated pools,
-                # jobs whose prefill->decode KV handoff just landed (they
-                # re-enter the queue as decode-phase work, placed
-                # independently of where they prefilled)
+                # 1) deliver arrivals
                 while pi < len(pending) and (pending[pi].arrival
                                              <= now + 1e-12):
                     job = pending[pi]
                     pi += 1
-                    queue.append(job)
-                    self.policy.on_arrival(job, self.cluster, now)
-                while self._handoff and self._handoff[0][0] <= now + 1e-12:
-                    _, _, job = heapq.heappop(self._handoff)
                     queue.append(job)
                     self.policy.on_arrival(job, self.cluster, now)
                 # 2) worker failures: kill the running job, re-queue it
@@ -521,6 +515,19 @@ class Simulator:
                                 self._xfer_s.pop(jid, None)
                                 self._between.pop(jid, None)
                             queue.append(rec.job)   # checkpoint-restart
+                    if self._disagg:
+                        # pull-style staging parks the KV on a "both"
+                        # prefill pool until the decode leg is admitted
+                        # (the jid stays in _xfer_s); if that pool dies
+                        # first, the parked cache dies with it and the
+                        # (still-queued) job re-prefills.  Pushed caches
+                        # already left their pool and are unaffected.
+                        for jid, brec in list(self._between.items()):
+                            if (brec.prefill_worker == f.worker
+                                    and jid in self._xfer_s):
+                                self.cluster.job_phase[jid] = "prefill"
+                                del self._xfer_s[jid]
+                                del self._between[jid]
                     if isinstance(w, BatchedWorkerSim):
                         w.on_failure(now)
                 # 3) complete finished jobs (running is at most one record
@@ -551,6 +558,14 @@ class Simulator:
                 # re-estimate their completions through the heap
                 for w in rebatch.values():
                     self._rebatch(w, now, running)
+                # deliver decode legs whose staging is done: parked
+                # caches (handed off by the completions above from a
+                # "both" pool) re-queue in this same iteration, pushed
+                # ones once their transfer lands
+                while self._handoff and self._handoff[0][0] <= now + 1e-12:
+                    _, _, job = heapq.heappop(self._handoff)
+                    queue.append(job)
+                    self.policy.on_arrival(job, self.cluster, now)
                 # 3b) straggler mitigation (speculative re-dispatch)
                 if self.speculative:
                     self._speculate(now, running)
@@ -813,6 +828,17 @@ class Simulator:
         if self.straggler_prob and self.rng.random() < self.straggler_prob:
             work *= self.straggler_factor
             prefill *= self.straggler_factor
+        if phase == "decode":
+            # a cache parked on a "both" pool (pull-style staging) is
+            # fetched now that the placement is known — free when the
+            # decode leg lands back on the pool that prefilled it (the
+            # cache never moves).  The pull heads the member's service (a
+            # contended batch stretches it like any service seconds) but
+            # is not noise-scaled: link time is deterministic.  Pushed
+            # caches paid the link before re-queueing (xfer is 0 here).
+            xfer = self._xfer_s.pop(a.job.id, 0.0)
+            if a.worker != self._between[a.job.id].prefill_worker:
+                work += xfer
         w.accrue(now)
         w.admit(now, a.job.id, a.job.engine, a.entry, prof, track_req,
                 work, prefill)
@@ -856,18 +882,29 @@ class Simulator:
     def _handoff_prefill(self, jid: int, rec: JobResult, now: float,
                          first_attempt: Dict[int, float]):
         """Prefill phase of a disaggregated job finished: record TTFT
-        (the prefill pool produced the first token), ship the KV cache,
-        and re-queue the decode phase once the transfer lands.  The
-        job's blocked-attempt clock restarts so the decode leg's
-        scheduling overhead accrues on top of the prefill leg's."""
+        (the prefill pool produced the first token), stage the KV cache,
+        and re-queue the decode phase.
+
+        Staging is role-aware.  A ``prefill``-only pool can never win the
+        decode leg, so its cache is *pushed* eagerly — the transfer
+        overlaps the re-queue and the decode leg arrives once it lands
+        (the pre-pull behavior, bit-for-bit).  A ``role="both"`` pool
+        might decode the job itself, so its cache is *parked* (the jid
+        stays in ``self._xfer_s``) and the decode leg queues immediately;
+        the pull is charged at decode admission, and costs nothing when
+        the leg lands back on the producing pool.  The job's
+        blocked-attempt clock restarts so the decode leg's scheduling
+        overhead accrues on top of the prefill leg's."""
         first_attempt.pop(jid, None)
         rec.ttft = rec.end - rec.job.arrival
         rec.prefill_worker = rec.worker
         self.cluster.job_phase[jid] = "decode"
         self._between[jid] = rec
-        ready = now + self._xfer_s.pop(jid, 0.0)
+        ready = now
+        if self.cluster.workers[rec.worker].pool.role != "both":
+            ready += self._xfer_s.pop(jid, 0.0)       # push eagerly
         heapq.heappush(self._handoff, (ready, next(self._seq), rec.job))
-        if self._heap is not None:
+        if ready > now and self._heap is not None:
             heapq.heappush(self._heap, (ready, next(self._seq),
                                         _W_ARRIVAL, None))
 

@@ -31,6 +31,11 @@ class WorkerPool:
     # in a disaggregated cluster); "prefill"/"decode" pools only admit that
     # phase.  Requires ``Simulator(..., serving="batched")``.
     role: str = "both"
+    # shared-infrastructure grouping for correlated failure traces
+    # (``workload.synth_failures(regions=True)``): pools in one region
+    # share power/network and go down together in a regional outage.
+    # "" means ungrouped.
+    region: str = ""
 
     @property
     def default_mode(self) -> OperatingMode:
@@ -61,7 +66,7 @@ def default_fleet() -> List[WorkerPool]:
 
 def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
                 n_edge_small: int = 1,
-                disaggregate=False) -> List[WorkerPool]:
+                disaggregate=False, regions: int = 0) -> List[WorkerPool]:
     """Synthetic fleet: replicate the three profiled pool archetypes.
 
     Replica k > 0 of an archetype is named ``<archetype>__<k+1>`` so it
@@ -80,6 +85,13 @@ def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
     a phase.  For explicit placements (e.g. cloud-archetype prefill +
     edge-archetype decode) build the fleet manually and set
     ``dataclasses.replace(pool, role=...)``.
+
+    ``regions > 0`` tags pools with region labels ``r0..r<regions-1>``
+    round-robin across the whole fleet, so every region holds a mix of
+    archetypes (a regional outage degrades the fleet instead of wiping
+    out one archetype).  Feed the tagged fleet to
+    ``workload.synth_failures(..., regions=True)`` for correlated
+    multi-region failure traces.
     """
     assert n_cloud + n_edge_large + n_edge_small > 0, "empty fleet"
     prefill_frac = 0.25 if disaggregate is True else float(disaggregate)
@@ -94,6 +106,9 @@ def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
             if disaggregate and n >= 2:
                 role = "prefill" if k < n_prefill else "decode"
             out.append(dataclasses.replace(pool, name=name, role=role))
+    if regions:
+        out = [dataclasses.replace(w, region=f"r{i % regions}")
+               for i, w in enumerate(out)]
     return out
 
 

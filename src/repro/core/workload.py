@@ -12,6 +12,10 @@ the ``synth_fleet`` clusters are built for:
                              rate (dispersion index > 1).
 * ``DiurnalArrivals``      — sinusoidal non-homogeneous Poisson (thinning).
 * ``FlashCrowdArrivals``   — a spike window at ``spike_factor`` x the base.
+* ``DriftedArrivals``      — engine-popularity drift: a base arrival
+  process plus time-varying engine mix weights (smooth or piecewise,
+  re-normalized per window), so the offline-profiled traffic mix goes
+  stale mid-trace.
 * ``ParetoSize``           — heavy-tail query counts.
 * ``TenantSpec`` + ``make_workload`` — multi-tenant mixes over the engine
   catalogue with per-tenant QoS tightness.
@@ -23,13 +27,20 @@ the ``synth_fleet`` clusters are built for:
   ``ttft_scale`` / ``tpot_scale`` additionally get per-class streaming
   SLOs (``Request.ttft_qos`` / ``tpot_qos``;
   ``scenario(..., streaming=...)`` is the all-tenants shorthand).
-* ``synth_failures``       — Poisson worker failures / exponential repair.
+* ``save_trace`` / ``load_trace`` / ``replay`` — JSON-lines serving
+  traces: any job list (or completed ``Simulator`` run) exports to a
+  trace file that round-trips exactly, so replays are bit-for-bit.
+* ``synth_failures``       — Poisson worker failures / exponential repair;
+  ``regions=`` + ``correlation=`` group pools into regions with
+  correlated outage windows (one event downs a sampled fraction of a
+  region simultaneously — shared-infrastructure edge outages).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import json
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -159,6 +170,77 @@ class FlashCrowdArrivals(_ThinnedArrivals):
         return self.base_rate                     # spike excluded: lower bound
 
 
+@dataclasses.dataclass
+class DriftedArrivals(ArrivalProcess):
+    """Engine-popularity drift: arrival *times* come from ``base``, while
+    the engine mix drifts from ``weights_start`` to ``weights_end`` over
+    ``span_s`` seconds.  ``make_workload`` picks each job's engine with
+    ``weights_at(arrival)`` instead of the tenant's static mix, so the
+    offline-profiled traffic mix goes stale mid-trace and the online
+    policy has to recover (PerLLM-style service-mix shift,
+    arXiv:2405.14636).
+
+    ``mode="smooth"`` interpolates linearly; ``mode="piecewise"`` holds
+    the mix constant inside each of ``n_windows`` equal windows and steps
+    between them (first window = start mix, last = end mix).  Weights are
+    re-normalized per window, so they sum to 1 at every instant whatever
+    the inputs' scales.  Weight vectors index the *tenant's* engine list
+    (``TenantSpec.engines``); ``engine_weights`` must stay ``None`` —
+    the drift carries the mix."""
+
+    base: ArrivalProcess
+    weights_start: Sequence[float]
+    weights_end: Sequence[float]
+    span_s: float
+    mode: str = "smooth"
+    n_windows: int = 4
+
+    def __post_init__(self):
+        if self.mode not in ("smooth", "piecewise"):
+            raise ValueError(f"mode must be 'smooth' or 'piecewise', "
+                             f"got {self.mode!r}")
+        if self.span_s <= 0:
+            raise ValueError("span_s must be positive")
+        if self.mode == "piecewise" and self.n_windows < 2:
+            raise ValueError("piecewise drift needs n_windows >= 2")
+        w0 = np.asarray(self.weights_start, float)
+        w1 = np.asarray(self.weights_end, float)
+        if w0.shape != w1.shape or w0.ndim != 1:
+            raise ValueError("weights_start/weights_end must be equal-"
+                             "length 1-D vectors")
+        if (w0 < 0).any() or (w1 < 0).any() or not (w0.sum() > 0
+                                                    and w1.sum() > 0):
+            raise ValueError("weights must be non-negative with a "
+                             "positive sum")
+        # make_workload calls weights_at once per job at fleet scale;
+        # normalize the endpoints once here
+        self._w0n = w0 / w0.sum()
+        self._w1n = w1 / w1.sum()
+
+    def weights_at(self, t: float) -> np.ndarray:
+        """Normalized engine mix at time ``t`` (clamped to the drift
+        span: before 0 it is the start mix, after ``span_s`` the end)."""
+        return self.weights_at_times([t])[0]
+
+    def weights_at_times(self, times) -> np.ndarray:
+        """Vectorized ``weights_at``: the ``[len(times), n_engines]``
+        mix matrix, one normalized row per instant (the fleet-scale
+        path — ``make_workload`` draws every pick from one call)."""
+        u = np.clip(np.asarray(times, float) / self.span_s, 0.0, 1.0)
+        if self.mode == "piecewise":
+            k = np.minimum((u * self.n_windows).astype(int),
+                           self.n_windows - 1)
+            u = k / (self.n_windows - 1)
+        w = (1.0 - u)[:, None] * self._w0n + u[:, None] * self._w1n
+        return w / w.sum(axis=1, keepdims=True)
+
+    def sample(self, rng, n):
+        return self.base.sample(rng, n)
+
+    def mean_rate(self):
+        return self.base.mean_rate()
+
+
 def index_of_dispersion(times: np.ndarray, window_s: float) -> float:
     """Variance/mean of per-window arrival counts: 1 for Poisson, > 1 for
     bursty processes.  The standard burstiness sanity metric."""
@@ -236,14 +318,37 @@ def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
     jobs: List[Job] = []
     for tenant in tenants:
         names = list(tenant.engines or default_engines())
+        drift = (tenant.arrivals
+                 if isinstance(tenant.arrivals, DriftedArrivals) else None)
         p = None
         if tenant.engine_weights is not None:
+            if drift is not None:
+                raise ValueError(
+                    f"tenant {tenant.name!r}: a DriftedArrivals tenant "
+                    f"carries its mix in the drift weights; leave "
+                    f"engine_weights=None")
             p = np.asarray(tenant.engine_weights, float)
             p = p / p.sum()
         arrivals = tenant.start_at + tenant.arrivals.sample(rng,
                                                             tenant.n_jobs)
         queries = tenant.sizes.sample(rng, tenant.n_jobs)
-        picks = rng.choice(len(names), size=tenant.n_jobs, p=p)
+        if drift is not None:
+            if len(np.asarray(drift.weights_start)) != len(names):
+                raise ValueError(
+                    f"tenant {tenant.name!r}: drift weights cover "
+                    f"{len(np.asarray(drift.weights_start))} engines, "
+                    f"tenant has {len(names)}")
+            # per-job mix at the job's arrival (drift clock starts at
+            # the tenant's start_at): one inverse-CDF draw per job over
+            # the [n_jobs, n_engines] weight matrix
+            cdf = np.cumsum(
+                drift.weights_at_times(arrivals - tenant.start_at),
+                axis=1)
+            picks = np.minimum(
+                (cdf < rng.random(tenant.n_jobs)[:, None]).sum(axis=1),
+                len(names) - 1)
+        else:
+            picks = rng.choice(len(names), size=tenant.n_jobs, p=p)
         for at, q, ei in zip(arrivals, queries, picks):
             engine = names[int(ei)]
             t_qos = tenant.qos_scale * qos_threshold(
@@ -375,7 +480,8 @@ HEAVY_ENGINES = ("qwen3-32b/bf16", "qwen3-4b/bf16", "phi3.5-moe/bf16",
                  "deepseek-v2/int8", "llama32-vision/bf16",
                  "seamless-m4t/bf16")
 
-SCENARIOS = ("poisson", "mmpp", "diurnal", "flash", "multi-tenant")
+SCENARIOS = ("poisson", "mmpp", "diurnal", "flash", "multi-tenant",
+             "drift")
 
 
 def _mix(cd, fleet, engines):
@@ -395,6 +501,9 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
              streaming=None) -> List[Job]:
     """Named fleet-scale scenarios over the engine catalogue, calibrated to
     ``utilization`` of the given fleet (default: the 3-pool paper fleet).
+    ``kind="drift"`` adds engine-popularity drift: the capacity-
+    proportional mix slides toward a heavyweight-dominated one over the
+    trace (``DriftedArrivals``), so the calibration goes stale.
 
     ``serving="batched"`` additionally attaches token-level ``Request``
     annotations (see ``attach_requests``) so the trace drives the
@@ -435,6 +544,30 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
                                         spike_duration=span / 20.0,
                                         spike_factor=8.0), n_jobs,
             **tenant)]
+    elif kind == "drift":
+        # popularity flip: the capacity-proportional mix drifts until the
+        # edge-friendly engines' aggregate traffic share and the
+        # heavyweights' have swapped — the offline calibration priced the
+        # heavy engines as rare, so the fleet slides into overload as the
+        # mix goes stale.  Rate is calibrated at the midpoint mix: the
+        # trace starts below target utilization and ends above it.
+        w0 = np.asarray(weights, float)
+        w0 = w0 / w0.sum()
+        edge = np.fromiter((e in EDGE_ENGINES for e in engines),
+                           dtype=bool, count=len(engines))
+        s_edge, s_heavy = w0[edge].sum(), w0[~edge].sum()
+        if s_edge > 0 and s_heavy > 0:
+            w1 = np.where(edge, w0 * (s_heavy / s_edge),
+                          w0 * (s_edge / s_heavy))
+        else:                       # degenerate fleet: reverse the mix
+            w1 = w0[::-1].copy()
+        w_mid = 0.5 * (w0 + w1 / w1.sum())
+        r_d = fleet_rate(cd, fleet, utilization, engines, list(w_mid))
+        span = n_jobs / r_d
+        tenants = [TenantSpec(
+            "drift", DriftedArrivals(PoissonArrivals(r_d), list(w0),
+                                     list(w1), span_s=span),
+            n_jobs, engines=engines)]
     elif kind == "multi-tenant":
         edge_e, edge_w = _mix(cd, fleet, list(EDGE_ENGINES))
         heavy_e, heavy_w = _mix(cd, fleet, list(HEAVY_ENGINES))
@@ -484,20 +617,215 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
 
 
 # ---------------------------------------------------------------------------
+# trace replay (JSON-lines serving logs)
+
+TRACE_VERSION = 1
+_TRACE_HEADER = "synergai_trace"
+
+
+def _job_record(job: Job) -> dict:
+    rec = {"id": job.id, "arrival": job.arrival, "engine": job.engine,
+           "queries": job.queries, "t_qos": job.t_qos,
+           "tenant": job.tenant}
+    if job.request is not None:
+        r = job.request
+        rec["prompt_tokens"] = r.prompt_tokens
+        rec["decode_tokens"] = r.decode_tokens
+        if r.ttft_qos is not None:
+            rec["ttft_qos"] = r.ttft_qos
+        if r.tpot_qos is not None:
+            rec["tpot_qos"] = r.tpot_qos
+    return rec
+
+
+def save_trace(path, trace) -> int:
+    """Export jobs as a JSON-lines trace; returns the record count.
+
+    ``trace`` is a sequence of ``Job``s or of ``JobResult``s (a completed
+    ``Simulator`` run — the jobs are pulled out of the results), written
+    in arrival order after a one-line header.  Floats are serialized at
+    full precision (json uses ``repr``), so ``load_trace`` round-trips
+    every field bit-for-bit and a replayed run reproduces the original
+    ``JobResult`` stream exactly (same fleet / policy / simulator seed).
+    """
+    jobs = [t.job if hasattr(t, "job") else t for t in trace]
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
+    with open(path, "w") as f:
+        f.write(json.dumps({_TRACE_HEADER: TRACE_VERSION,
+                            "jobs": len(jobs)}) + "\n")
+        for job in jobs:
+            f.write(json.dumps(_job_record(job)) + "\n")
+    return len(jobs)
+
+
+def _trace_error(path, lineno: int, msg: str) -> ValueError:
+    return ValueError(f"{path}:{lineno}: {msg}")
+
+
+def load_trace(path) -> List[Job]:
+    """Parse a ``save_trace`` file back into the exact job list.
+
+    Malformed input — missing/garbled header, non-JSON lines, missing or
+    mistyped fields, a record-count mismatch — raises ``ValueError``
+    naming the offending line."""
+    jobs: List[Job] = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        raise _trace_error(path, 1, "empty file, expected a "
+                           f"{{'{_TRACE_HEADER}': ...}} header")
+    try:
+        header = json.loads(lines[0])
+    except json.JSONDecodeError as e:
+        raise _trace_error(path, 1, f"bad header: {e}") from None
+    if not isinstance(header, dict) or _TRACE_HEADER not in header:
+        raise _trace_error(path, 1, f"not a SynergAI trace (missing "
+                           f"{_TRACE_HEADER!r} header key)")
+    if header[_TRACE_HEADER] != TRACE_VERSION:
+        raise _trace_error(path, 1, f"unsupported trace version "
+                           f"{header[_TRACE_HEADER]!r}")
+    seen: set = set()
+    for lineno, line in enumerate(lines[1:], 2):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise _trace_error(path, lineno, f"bad record: {e}") from None
+        if not isinstance(rec, dict):
+            raise _trace_error(path, lineno, "record is not an object")
+        try:
+            request = None
+            if "prompt_tokens" in rec or "decode_tokens" in rec:
+                request = Request(int(rec["prompt_tokens"]),
+                                  int(rec["decode_tokens"]),
+                                  (float(rec["ttft_qos"])
+                                   if "ttft_qos" in rec else None),
+                                  (float(rec["tpot_qos"])
+                                   if "tpot_qos" in rec else None))
+            jobs.append(Job(int(rec["id"]), str(rec["engine"]),
+                            int(rec["queries"]), float(rec["t_qos"]),
+                            float(rec["arrival"]), request=request,
+                            tenant=str(rec.get("tenant", ""))))
+        except (KeyError, TypeError, ValueError) as e:
+            raise _trace_error(path, lineno,
+                               f"bad job record ({e!r})") from None
+        if jobs[-1].id in seen:
+            raise _trace_error(path, lineno, f"duplicate job id "
+                               f"{jobs[-1].id} (the simulator keys "
+                               f"running state by id)")
+        seen.add(jobs[-1].id)
+    n = header.get("jobs")
+    if n is not None and n != len(jobs):
+        raise _trace_error(path, 1, f"header promises {n} jobs, file "
+                           f"holds {len(jobs)}")
+    return jobs
+
+
+def replay(trace) -> List[Job]:
+    """Jobs ready to feed the simulator's event heap, from a trace file
+    path, a job list, or a completed run's ``JobResult`` stream.  Jobs are
+    arrival-sorted with their original ids preserved, so
+    ``Simulator(...).run(replay(path))`` reproduces the exporting run
+    bit-for-bit (same fleet, policy and simulator seed — the rng draws
+    depend only on the event order, which the trace pins)."""
+    if isinstance(trace, (str, bytes)) or hasattr(trace, "__fspath__"):
+        jobs = load_trace(trace)
+    else:
+        jobs = [t.job if hasattr(t, "job") else t for t in trace]
+    return sorted(jobs, key=lambda j: (j.arrival, j.id))
+
+
+# ---------------------------------------------------------------------------
 # failure traces
 
 
+def _failure_regions(fleet: Sequence[WorkerPool],
+                     regions) -> Dict[str, List[str]]:
+    """Resolve the ``synth_failures`` regions spec into
+    ``{region: [pool names]}``: ``True`` reads ``WorkerPool.region`` tags
+    (``synth_fleet(..., regions=k)`` sets them), an int groups the fleet
+    round-robin, a mapping is taken as-is (every pool in at most one
+    region)."""
+    if regions is True:
+        groups: Dict[str, List[str]] = {}
+        for w in fleet:
+            if not w.region:
+                raise ValueError(f"pool {w.name!r} has no region tag; "
+                                 f"build the fleet with synth_fleet(..., "
+                                 f"regions=k) or pass regions=<int|dict>")
+            groups.setdefault(w.region, []).append(w.name)
+        return groups
+    if isinstance(regions, int):
+        if regions <= 0:
+            raise ValueError("regions must be a positive int")
+        groups = {}
+        for i, w in enumerate(fleet):
+            groups.setdefault(f"r{i % regions}", []).append(w.name)
+        return groups
+    if isinstance(regions, dict):
+        names = {w.name for w in fleet}
+        seen: set = set()
+        for rname, pools in regions.items():
+            if not pools:
+                raise ValueError(f"region {rname!r} has no pools")
+            for p in pools:
+                if p not in names:
+                    raise ValueError(f"region {rname!r} names unknown "
+                                     f"pool {p!r}")
+                if p in seen:
+                    raise ValueError(f"pool {p!r} appears in more than "
+                                     f"one region")
+                seen.add(p)
+        return {str(r): list(p) for r, p in regions.items()}
+    raise ValueError(f"regions must be True, an int or a mapping, "
+                     f"got {regions!r}")
+
+
 def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
-                   mtbf_s: float, mttr_s: float,
-                   seed: int = 0) -> List[FailureEvent]:
-    """Per-worker Poisson failures with exponential repair times, for
-    fleet-scale robustness runs (the simulator re-queues killed jobs)."""
+                   mtbf_s: float, mttr_s: float, seed: int = 0,
+                   regions=None,
+                   correlation: float = 0.5) -> List[FailureEvent]:
+    """Synthetic failure traces for fleet-scale robustness runs (the
+    simulator re-queues killed jobs).
+
+    Default (``regions=None``): independent per-worker Poisson failures
+    with exponential repair times — the original model, byte-identical
+    output for a given seed.
+
+    ``regions=`` switches to *correlated multi-region outages*
+    (shared-infrastructure failures at the edge: power, uplink, cooling).
+    Pools are grouped into regions (``True`` → ``WorkerPool.region``
+    tags, int → round-robin, mapping → explicit); each region suffers
+    Poisson outage events (mean gap ``mtbf_s``), and every event downs
+    ``max(1, round(correlation * len(region)))`` of the region's pools
+    *simultaneously* for one shared exponential repair window.  A
+    region's next outage is drawn after the previous repair completes,
+    so no pool's failure windows ever overlap."""
     rng = np.random.default_rng(seed)
     events: List[FailureEvent] = []
-    for w in fleet:
+    if regions is None or regions is False:    # False == off, like
+        regions = None                         # synth_fleet(disaggregate=)
+    if regions is None:
+        for w in fleet:
+            t = rng.exponential(mtbf_s)
+            while t < horizon_s:
+                d = rng.exponential(mttr_s)
+                events.append(FailureEvent(w.name, float(t), float(d)))
+                t += d + rng.exponential(mtbf_s)
+        return sorted(events, key=lambda f: f.at)
+    if not 0.0 < correlation <= 1.0:
+        raise ValueError(f"correlation must be in (0, 1], "
+                         f"got {correlation}")
+    groups = _failure_regions(fleet, regions)
+    for rname in sorted(groups):
+        pools = groups[rname]
+        n_down = max(1, int(round(correlation * len(pools))))
         t = rng.exponential(mtbf_s)
         while t < horizon_s:
             d = rng.exponential(mttr_s)
-            events.append(FailureEvent(w.name, float(t), float(d)))
+            down = rng.choice(len(pools), size=n_down, replace=False)
+            for i in sorted(down):
+                events.append(FailureEvent(pools[i], float(t), float(d)))
             t += d + rng.exponential(mtbf_s)
     return sorted(events, key=lambda f: f.at)

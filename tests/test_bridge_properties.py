@@ -7,7 +7,10 @@ Invariants:
   * m(b) is monotone decreasing in b while b * m(b) is increasing;
   * TTFT <= end-to-end latency, TPOT >= 0;
   * forced ``max_batch=1`` equals job mode bit-for-bit under random
-    workloads (the bridge's semantics anchor).
+    workloads (the bridge's semantics anchor);
+  * trace export/replay preserves arrival order, total token counts and
+    the trace's burstiness (``index_of_dispersion``) exactly, for every
+    scenario preset.
 
 Each property lives in a plain ``_check_*`` helper: hypothesis drives it
 over drawn inputs in CI, and a deterministic parametrized test drives it
@@ -16,6 +19,7 @@ hypothesis)."""
 
 import functools
 
+import numpy as np
 import pytest
 from conftest import given, settings, st
 
@@ -29,7 +33,8 @@ from repro.core.serving_bridge import (batch_multiplier, batch_profile,
                                        batch_throughput)
 from repro.core.simulator import BatchedWorkerSim, Simulator
 from repro.core.workers import WorkerPool, synth_fleet
-from repro.core.workload import scenario
+from repro.core.workload import (index_of_dispersion, replay, save_trace,
+                                 scenario)
 
 
 @functools.lru_cache(maxsize=None)
@@ -112,6 +117,40 @@ def _check_batch1_equals_job_mode(seed: int, kind: str,
     assert _result_key(a) == _result_key(b)
 
 
+def _check_trace_replay_preserves(seed: int, kind: str, serving: str):
+    """Export -> replay preserves the arrival order, every job's token
+    counts (aggregate prompt/decode totals match exactly), and the
+    trace's burstiness: ``index_of_dispersion`` of the replayed arrivals
+    equals the source's bit-for-bit (arrivals round-trip exactly)."""
+    import os
+    import tempfile
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(cd, kind, n_jobs=60, fleet=fleet, seed=seed,
+                    serving=serving)
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        save_trace(path, jobs)
+        back = replay(path)
+    finally:
+        os.unlink(path)
+    assert [j.id for j in back] == [j.id for j in jobs]
+    assert all(a.arrival <= b.arrival for a, b in zip(back, back[1:]))
+    assert [j.arrival for j in back] == [j.arrival for j in jobs]
+    assert sum(j.queries for j in back) == sum(j.queries for j in jobs)
+    if serving == "batched":
+        assert (sum(j.request.prompt_tokens for j in back)
+                == sum(j.request.prompt_tokens for j in jobs))
+        assert (sum(j.request.decode_tokens for j in back)
+                == sum(j.request.decode_tokens for j in jobs))
+    t_src = np.array([j.arrival for j in jobs])
+    t_rep = np.array([j.arrival for j in back])
+    window = max(1.0, float(t_src.max()) / 16.0)
+    assert (index_of_dispersion(t_rep, window)
+            == index_of_dispersion(t_src, window))
+
+
 # ----------------------------------------------------------------------------
 # hypothesis drivers (skip cleanly without the library)
 
@@ -144,6 +183,15 @@ def test_prop_batch1_equals_job_mode(seed, kind, utilization):
     _check_batch1_equals_job_mode(seed, kind, utilization, SynergAI)
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "mmpp", "diurnal", "flash",
+                             "multi-tenant", "drift"]),
+       serving=st.sampled_from(["job", "batched"]))
+def test_prop_trace_replay_preserves(seed, kind, serving):
+    _check_trace_replay_preserves(seed, kind, serving)
+
+
 # ----------------------------------------------------------------------------
 # seeded fallbacks: the same properties, pinned inputs, always run
 
@@ -170,3 +218,12 @@ def test_kv_budget_seeded():
 ])
 def test_batch1_equals_job_mode_seeded(seed, kind, policy_cls):
     _check_batch1_equals_job_mode(seed, kind, 1.2, policy_cls)
+
+
+@pytest.mark.parametrize("seed,kind,serving", [
+    (31, "mmpp", "job"),
+    (37, "drift", "batched"),
+    (41, "multi-tenant", "batched"),
+])
+def test_trace_replay_preserves_seeded(seed, kind, serving):
+    _check_trace_replay_preserves(seed, kind, serving)

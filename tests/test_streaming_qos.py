@@ -9,6 +9,7 @@ without double-counting decode tokens, and ``bench_streaming``'s
 disaggregated fleet beats the aggregated one on TTFT violations under
 the mmpp overload preset."""
 
+import dataclasses
 import math
 
 import numpy as np
@@ -352,6 +353,106 @@ def test_disagg_failure_mid_prefill_restarts_once_counted(configdict):
     assert dec_ws.decoded_tokens == req.decode_tokens
     assert dec_ws.prefill_tokens == 0
     assert r.ttft >= fail.at + fail.duration     # prefill restarted
+
+
+def test_pull_staging_same_pool_zero_transfer(configdict):
+    """Pull-style KV staging (ROADMAP open item): a disaggregated
+    handoff whose decode leg lands back on the same ``role="both"`` pool
+    must not pay the DISAGG_XFER link — the cache never moves."""
+    from repro.core.workers import default_fleet
+    spec = default_engines()[ENGINE]
+    cloud, _, small = default_fleet()
+    fleet = [cloud, dataclasses.replace(small, role="prefill")]
+    job = Job(0, ENGINE, 800, 1e6, 0.0,
+              request=Request(800 * spec.prefill_len,
+                              800 * spec.decode_len))
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, exec_noise=0.0,
+                    serving="batched")
+    r = sim.run([job])[0]
+    assert r.prefill_worker == "cloud-pod" and r.worker == "cloud-pod"
+    ent = configdict.optimal(ENGINE, "cloud-pod")
+    prof = batch_profile(ent, spec, cloud)
+    work, prefill = solo_service(ent, prof, job.request, 800)
+    assert r.ttft == pytest.approx(prefill, rel=1e-9)
+    assert r.e2e == pytest.approx(work, rel=1e-9)     # no transfer paid
+    assert kv_transfer_s(prof) > 0                    # it would have cost
+
+
+def test_pull_staging_cross_pool_pays_at_admission(configdict):
+    """A cache parked on a ``role="both"`` pool whose decode leg moves to
+    a *different* pool still pays the link — charged at decode admission,
+    so the end-to-end time is exactly prefill + transfer + decode."""
+    from repro.core.workers import default_fleet
+    spec = default_engines()[ENGINE]
+    cloud, large, _ = default_fleet()
+    fleet = [dataclasses.replace(large, role="both"),
+             dataclasses.replace(cloud, role="decode")]
+    job = Job(0, ENGINE, 800, 1e6, 0.0,
+              request=Request(800 * spec.prefill_len,
+                              800 * spec.decode_len))
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, exec_noise=0.0,
+                    serving="batched")
+    r = sim.run([job])[0]
+    assert r.prefill_worker == "edge-large"     # the only prefill pool
+    assert r.worker == "cloud-pod"              # faster decode wins
+    ent_l = configdict.optimal(ENGINE, "edge-large")
+    ent_c = configdict.optimal(ENGINE, "cloud-pod")
+    prof_l = batch_profile(ent_l, spec, large)
+    prof_c = batch_profile(ent_c, spec, cloud)
+    _, prefill_l = solo_service(ent_l, prof_l, job.request, 800)
+    work_c, prefill_c = solo_service(ent_c, prof_c, job.request, 800)
+    assert r.ttft == pytest.approx(prefill_l, rel=1e-9)
+    assert r.e2e == pytest.approx(prefill_l + kv_transfer_s(prof_l)
+                                  + (work_c - prefill_c), rel=1e-9)
+
+
+def test_pull_staging_parked_kv_lost_on_prefill_pool_failure(configdict):
+    """A ``role="both"`` pool that dies while a handed-off cache is still
+    parked on it (decode leg queued, not yet admitted) loses the cache:
+    the job re-prefills after recovery.  A scripted policy parks the
+    decode leg across the failure window to pin the sequence."""
+    from repro.core.simulator import Assignment, Policy
+
+    spec = default_engines()[ENGINE]
+    fleet = synth_fleet(2, 0, 0, disaggregate=True)
+    fleet = [dataclasses.replace(fleet[0], role="both"), fleet[1]]
+    req = Request(500 * spec.prefill_len, 500 * spec.decode_len)
+    job = Job(0, ENGINE, 500, 1e6, 0.0, request=req)
+    ent = configdict.optimal(ENGINE, "cloud-pod")
+    prof = batch_profile(ent, spec, fleet[0])
+    work, prefill = solo_service(ent, prof, req, 500)
+    fail = FailureEvent("cloud-pod", 1.5 * prefill, 5.0)   # cache parked
+    recover = fail.at + fail.duration
+
+    class Scripted(Policy):
+        name = "scripted"
+        use_default_config = False
+
+        def schedule(self, now, queue, cluster):
+            out = []
+            for j in queue:
+                if cluster.phase_of(j) == "decode" and now < recover:
+                    continue        # hold the decode leg: keep it parked
+                for w in cluster.workers:
+                    if (cluster.admit_ok(j, w, now)
+                            and cluster.feasible(j.engine, w, False)):
+                        out.append(Assignment(
+                            j, w, configdict.optimal(j.engine, w)))
+                        break
+            return out
+
+    sim = Simulator(configdict, Scripted(), fleet=fleet, exec_noise=0.0,
+                    serving="batched", failures=[fail])
+    r = sim.run([job])[0]
+    ws = sim.cluster.workers["cloud-pod"]
+    # the parked cache died with the pool: prefill ran twice, the second
+    # one after recovery, and the decode leg (same pool) paid no link
+    assert r.ttft == pytest.approx(recover + prefill, rel=1e-9)
+    assert r.prefill_worker == "cloud-pod" and r.worker == "cloud-pod"
+    assert r.e2e == pytest.approx(recover + work, rel=1e-9)
+    assert ws.prefill_tokens == 2 * req.prompt_tokens   # honest double work
+    assert ws.decoded_tokens == req.decode_tokens
+    assert sim.cluster.workers["cloud-pod__2"].admitted == 0
 
 
 def test_summarize_by_tenant_groups(configdict):

@@ -1,0 +1,183 @@
+"""Trace replay (``workload.save_trace`` / ``load_trace`` / ``replay``):
+export → load → replay round-trips are exact at the full ``JobResult``
+stream level, a replayed MMPP schedule is pinned bit-for-bit by a golden
+digest, malformed trace files fail loudly with the offending line, and
+``bench_traces`` reports every policy under replay / drift / a
+correlated-region outage."""
+
+import hashlib
+import math
+import os
+
+import pytest
+
+from repro.core.job import Job, Request
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import Simulator
+from repro.core.workers import synth_fleet
+from repro.core.workload import (load_trace, replay, save_trace, scenario,
+                                 synth_failures)
+
+
+def _result_key(results):
+    """Every JobResult field that the simulator computes (job identity,
+    placement, all timings, all flags) — bit-level, no rounding."""
+    return sorted(
+        (r.job.id, r.job.engine, r.job.queries, r.job.t_qos,
+         r.job.arrival, r.job.tenant, r.worker, r.config, r.start, r.end,
+         r.waiting, r.exec_s, r.e2e, r.violated, r.excess, r.overhead_s,
+         r.ttft, r.tpot, r.ttft_violated, r.tpot_violated,
+         r.prefill_worker) for r in results)
+
+
+# ----------------------------------------------------------------------------
+# round-trip equality
+
+
+@pytest.mark.parametrize("serving,streaming", [
+    ("job", None),
+    ("batched", (2.0, 2.5)),
+])
+def test_export_load_replay_roundtrip_exact(configdict, tmp_path, serving,
+                                            streaming):
+    """A completed Simulator run exported with save_trace and fed back
+    through replay reproduces the original JobResult stream exactly —
+    including token-level Requests and streaming deadlines."""
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=80, fleet=fleet, seed=5,
+                    utilization=1.2, serving=serving, streaming=streaming)
+    res_a = Simulator(configdict, SynergAI(), fleet=fleet, seed=5,
+                      serving=serving).run(jobs)
+    path = tmp_path / "trace.jsonl"
+    n = save_trace(path, res_a)                  # export the *run*
+    assert n == 80
+    replayed = replay(str(path))
+    # the reloaded jobs are field-identical, ids preserved
+    by_id = {j.id: j for j in jobs}
+    for j in replayed:
+        o = by_id[j.id]
+        assert (j.engine, j.queries, j.t_qos, j.arrival, j.tenant) == \
+            (o.engine, o.queries, o.t_qos, o.arrival, o.tenant)
+        assert j.request == o.request
+    res_b = Simulator(configdict, SynergAI(), fleet=fleet, seed=5,
+                      serving=serving).run(replayed)
+    assert _result_key(res_a) == _result_key(res_b)
+
+
+def test_replay_accepts_jobs_results_and_paths(configdict, tmp_path):
+    jobs = scenario(configdict, "poisson", n_jobs=20,
+                    fleet=synth_fleet(1, 1, 1), seed=1)
+    res = Simulator(configdict, SynergAI(),
+                    fleet=synth_fleet(1, 1, 1), seed=1).run(jobs)
+    path = tmp_path / "t.jsonl"
+    save_trace(path, jobs)                       # from jobs ...
+    a = [(j.id, j.arrival, j.engine) for j in replay(str(path))]
+    save_trace(path, res)                        # ... and from results
+    b = [(j.id, j.arrival, j.engine) for j in replay(str(path))]
+    c = [(j.id, j.arrival, j.engine) for j in replay(res)]
+    d = [(j.id, j.arrival, j.engine) for j in replay(jobs)]
+    assert a == b == c == d
+
+
+# ----------------------------------------------------------------------------
+# golden digest: one replayed MMPP schedule, bit-for-bit
+
+# sha256 over the canonical per-job result lines (repr floats) of
+# scenario(mmpp, n_jobs=40, synth_fleet(1, 2, 2), seed=7,
+# utilization=1.2) exported, replayed and run under SynergAI, seed=7.
+# Any change to the trace format, the workload generators, the scheduler
+# or the event heap that shifts this schedule by one bit fails here.
+REPLAY_GOLDEN_DIGEST = \
+    "91f3689b8ef38d43982aed542e312c381899d279d83064f5b3efe5f76e078189"
+
+
+def test_golden_digest_replayed_mmpp(configdict, tmp_path):
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=40, fleet=fleet, seed=7,
+                    utilization=1.2)
+    path = tmp_path / "golden.jsonl"
+    save_trace(path, jobs)
+    res = Simulator(configdict, SynergAI(), fleet=fleet,
+                    seed=7).run(replay(str(path)))
+    canon = "\n".join(
+        f"{r.job.id},{r.worker},{r.config},{r.start!r},{r.end!r},"
+        f"{r.ttft!r},{r.tpot!r},{int(r.violated)}"
+        for r in sorted(res, key=lambda r: r.job.id))
+    assert hashlib.sha256(canon.encode()).hexdigest() == \
+        REPLAY_GOLDEN_DIGEST
+
+
+# ----------------------------------------------------------------------------
+# malformed traces fail loudly
+
+
+def _write(path, text):
+    path.write_text(text)
+    return str(path)
+
+
+def test_malformed_trace_lines_raise(configdict, tmp_path):
+    header = '{"synergai_trace": 1, "jobs": 1}\n'
+    good = ('{"id": 0, "arrival": 0.5, "engine": "gemma-2b/bf16", '
+            '"queries": 100, "t_qos": 9.0, "tenant": ""}\n')
+    # happy path first: the fixture lines themselves are valid
+    jobs = load_trace(_write(tmp_path / "ok.jsonl", header + good))
+    assert jobs[0].engine == "gemma-2b/bf16" and jobs[0].request is None
+
+    with pytest.raises(ValueError, match="empty file"):
+        load_trace(_write(tmp_path / "empty.jsonl", ""))
+    with pytest.raises(ValueError, match="not a SynergAI trace"):
+        load_trace(_write(tmp_path / "nohdr.jsonl", good + good))
+    with pytest.raises(ValueError, match="unsupported trace version"):
+        load_trace(_write(tmp_path / "vers.jsonl",
+                          '{"synergai_trace": 99}\n' + good))
+    with pytest.raises(ValueError, match=":2: bad record"):
+        load_trace(_write(tmp_path / "garbled.jsonl",
+                          header + "not json at all\n"))
+    with pytest.raises(ValueError, match=":3: bad job record"):
+        load_trace(_write(tmp_path / "missing.jsonl",
+                          header + good +
+                          '{"id": 1, "arrival": 2.0}\n'))
+    with pytest.raises(ValueError, match=":2: bad job record"):
+        load_trace(_write(tmp_path / "mistyped.jsonl", header +
+                          good.replace('"queries": 100',
+                                       '"queries": "many"')))
+    with pytest.raises(ValueError, match="promises 2 jobs"):
+        load_trace(_write(tmp_path / "count.jsonl",
+                          '{"synergai_trace": 1, "jobs": 2}\n' + good))
+    with pytest.raises(ValueError, match=":3: duplicate job id 0"):
+        load_trace(_write(tmp_path / "dup.jsonl",
+                          '{"synergai_trace": 1, "jobs": 2}\n'
+                          + good + good))
+
+
+def test_save_trace_roundtrips_request_fields(tmp_path):
+    jobs = [Job(0, "gemma-2b/bf16", 123, 4.5, 0.25, tenant="chat",
+                request=Request(1000, 2000, ttft_qos=1.25,
+                                tpot_qos=0.001)),
+            Job(1, "qwen3-4b/bf16", 7, 8.25, 1.75)]
+    path = tmp_path / "req.jsonl"
+    save_trace(path, jobs)
+    back = load_trace(str(path))
+    assert back[0].request == jobs[0].request
+    assert back[1].request is None
+    assert [j.tenant for j in back] == ["chat", ""]
+
+
+# ----------------------------------------------------------------------------
+# bench_traces: every policy under replay / drift / correlated outage
+
+
+def test_bench_traces_sections_and_replay_exactness(configdict):
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from scheduler_experiments import POLICIES, bench_traces
+    out = bench_traces(configdict, n_jobs=250, pools=(1, 2, 2),
+                       emit=lambda *_: None)
+    assert out[("replay", "exact")]["replay_exact"] is True
+    for section in ("replay", "drift", "outage"):
+        for P in POLICIES:
+            s = out[(section, P.name)]
+            assert s["jobs"] == 250
+            assert math.isfinite(s["e2e_p99_s"])

@@ -1,17 +1,22 @@
 """Workload subsystem: arrival-process statistics (MMPP burstier than
 Poisson at equal mean rate), heavy-tail sizes, QoS derivation, multi-tenant
-merging, synthetic fleets and failure traces."""
+merging, synthetic fleets, failure traces — plus the trace-driven axes:
+engine-popularity drift (``DriftedArrivals``) and correlated multi-region
+failures, with hypothesis properties behind the conftest shim (seeded
+fallbacks always run)."""
 
 import numpy as np
 import pytest
+from conftest import given, settings, st
 
 from repro.core.job import make_experiment, qos_threshold
 from repro.core.workers import default_fleet, synth_fleet
-from repro.core.workload import (SCENARIOS, DiurnalArrivals,
-                                 FlashCrowdArrivals, FixedSize,
-                                 MMPPArrivals, ParetoSize, PoissonArrivals,
-                                 TenantSpec, index_of_dispersion,
-                                 make_workload, scenario, synth_failures)
+from repro.core.workload import (EDGE_ENGINES, SCENARIOS, DiurnalArrivals,
+                                 DriftedArrivals, FlashCrowdArrivals,
+                                 FixedSize, MMPPArrivals, ParetoSize,
+                                 PoissonArrivals, TenantSpec,
+                                 index_of_dispersion, make_workload,
+                                 scenario, synth_failures)
 
 
 # ----------------------------------------------------------------------------
@@ -138,6 +143,100 @@ def test_make_experiment_still_paper_shaped(configdict):
 
 
 # ----------------------------------------------------------------------------
+# engine-popularity drift
+
+
+def _check_drift_weights_normalized(w0, w1, span, mode, n_windows):
+    """Mixing weights re-normalize to 1 in every window, whatever the
+    input scales; piecewise drift is constant within a window and hits
+    the exact start/end mixes at the extremes."""
+    d = DriftedArrivals(PoissonArrivals(1.0), w0, w1, span_s=span,
+                        mode=mode, n_windows=n_windows)
+    for t in np.linspace(-0.1 * span, 1.1 * span, 97):
+        w = d.weights_at(float(t))
+        assert w.shape == (len(w0),)
+        assert (w >= 0).all()
+        assert np.isclose(w.sum(), 1.0, atol=1e-12)
+    w_start = np.asarray(w0, float) / np.sum(w0)
+    w_end = np.asarray(w1, float) / np.sum(w1)
+    assert np.allclose(d.weights_at(0.0), w_start)
+    assert np.allclose(d.weights_at(span), w_end)
+    if mode == "piecewise":
+        width = span / n_windows
+        for k in range(n_windows):      # constant inside each window
+            lo, hi = k * width, (k + 1) * width
+            a = d.weights_at(lo + 0.01 * width)
+            b = d.weights_at(hi - 0.01 * width)
+            assert np.allclose(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w0=st.lists(st.floats(0.01, 50.0), min_size=2, max_size=8),
+       seed=st.integers(0, 10_000),
+       span=st.floats(10.0, 1e5),
+       mode=st.sampled_from(["smooth", "piecewise"]),
+       n_windows=st.integers(2, 12))
+def test_prop_drift_weights_sum_to_1(w0, seed, span, mode, n_windows):
+    rng = np.random.default_rng(seed)
+    w1 = rng.uniform(0.01, 50.0, size=len(w0)).tolist()
+    _check_drift_weights_normalized(w0, w1, span, mode, n_windows)
+
+
+@pytest.mark.parametrize("mode,n_windows", [("smooth", 2),
+                                            ("piecewise", 4),
+                                            ("piecewise", 7)])
+def test_drift_weights_sum_to_1_seeded(mode, n_windows):
+    _check_drift_weights_normalized([3.0, 1.0, 0.25], [0.1, 5.0, 2.0],
+                                    1000.0, mode, n_windows)
+
+
+def test_drift_validation():
+    base = PoissonArrivals(1.0)
+    with pytest.raises(ValueError):
+        DriftedArrivals(base, [1, 2], [1, 2], span_s=10.0, mode="nope")
+    with pytest.raises(ValueError):
+        DriftedArrivals(base, [1, 2], [1, 2, 3], span_s=10.0)
+    with pytest.raises(ValueError):
+        DriftedArrivals(base, [1, -2], [1, 2], span_s=10.0)
+    with pytest.raises(ValueError):
+        DriftedArrivals(base, [1, 2], [1, 2], span_s=0.0)
+    with pytest.raises(ValueError):
+        DriftedArrivals(base, [1, 2], [1, 2], span_s=5.0,
+                        mode="piecewise", n_windows=1)
+
+
+def test_drifted_tenant_rejects_static_weights(configdict):
+    drift = DriftedArrivals(PoissonArrivals(1.0), [1.0, 1.0], [0.0, 1.0],
+                            span_s=100.0)
+    spec = TenantSpec("d", drift, 10,
+                      engines=("gemma-2b/bf16", "qwen3-4b/bf16"),
+                      engine_weights=(0.5, 0.5))
+    with pytest.raises(ValueError):
+        make_workload(configdict, [spec], seed=0)
+    bad = TenantSpec("d", drift, 10, engines=("gemma-2b/bf16",))
+    with pytest.raises(ValueError):        # weight/engine length mismatch
+        make_workload(configdict, [bad], seed=0)
+
+
+def test_drift_scenario_mix_goes_stale(configdict):
+    """The drift preset's point: the engine mix early in the trace looks
+    like the offline-calibrated capacity-proportional one (edge-heavy);
+    late in the trace the heavyweights have taken the traffic share."""
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "drift", n_jobs=1000, fleet=fleet, seed=3)
+    assert len(jobs) == 1000
+    edge_share = lambda js: np.mean([j.engine in EDGE_ENGINES
+                                     for j in js])
+    early, late = edge_share(jobs[:200]), edge_share(jobs[-200:])
+    assert early > late + 0.1           # popularity flipped edge -> heavy
+    assert {j.tenant for j in jobs} == {"drift"}
+    # drift composes with the serving bridge like every other preset
+    jobs_b = scenario(configdict, "drift", n_jobs=50, fleet=fleet, seed=3,
+                      serving="batched")
+    assert all(j.request is not None for j in jobs_b)
+
+
+# ----------------------------------------------------------------------------
 # fleets + failures
 
 
@@ -163,3 +262,111 @@ def test_synth_failures_within_horizon_sorted():
     assert all(0 <= e.at < 5000.0 and e.duration > 0 for e in evs)
     assert all(a.at <= b.at for a, b in zip(evs, evs[1:]))
     assert {e.worker for e in evs} <= {w.name for w in fleet}
+
+
+# ----------------------------------------------------------------------------
+# correlated multi-region failures
+
+
+def test_synth_fleet_region_tags():
+    fleet = synth_fleet(2, 4, 3, regions=3)
+    regions = {w.region for w in fleet}
+    assert regions == {"r0", "r1", "r2"}
+    # round-robin: every region holds a mix, sizes within one of each
+    # other, and plain fleets stay untagged
+    sizes = [sum(w.region == r for w in fleet) for r in sorted(regions)]
+    assert max(sizes) - min(sizes) <= 1
+    assert all(w.region == "" for w in synth_fleet(2, 4, 3))
+
+
+def _check_correlated_failures(n_pools, n_regions, correlation, seed):
+    """The correlated-failure invariants: every event's pool belongs to
+    the event's region, a single outage downs the sampled fraction of
+    the region simultaneously, and no pool's failure windows overlap."""
+    fleet = synth_fleet(n_pools, n_pools, n_pools, regions=n_regions)
+    horizon = 50_000.0
+    evs = synth_failures(fleet, horizon, mtbf_s=5000.0, mttr_s=400.0,
+                         seed=seed, regions=True, correlation=correlation)
+    region_of = {w.name: w.region for w in fleet}
+    region_size = {r: sum(1 for w in fleet if w.region == r)
+                   for r in {w.region for w in fleet}}
+    assert evs and all(0 <= e.at < horizon and e.duration > 0
+                       for e in evs)
+    # one outage = one (at, duration) shared by its downed pools, all in
+    # one region, exactly the correlated fraction of it
+    by_outage = {}
+    for e in evs:
+        by_outage.setdefault((e.at, e.duration), []).append(e.worker)
+    for (at, dur), pools in by_outage.items():
+        regs = {region_of[p] for p in pools}
+        assert len(regs) == 1, "an outage crossed a region boundary"
+        r = regs.pop()
+        assert len(pools) == len(set(pools))
+        assert len(pools) == max(1, round(correlation * region_size[r]))
+    # per-pool windows never overlap
+    by_pool = {}
+    for e in evs:
+        by_pool.setdefault(e.worker, []).append((e.at, e.at + e.duration))
+    for spans in by_pool.values():
+        spans.sort()
+        assert all(a_end <= b_at for (_, a_end), (b_at, _)
+                   in zip(spans, spans[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_pools=st.integers(1, 4), n_regions=st.integers(1, 5),
+       correlation=st.floats(0.05, 1.0), seed=st.integers(0, 10_000))
+def test_prop_correlated_failures(n_pools, n_regions, correlation, seed):
+    _check_correlated_failures(n_pools, n_regions, correlation, seed)
+
+
+@pytest.mark.parametrize("n_pools,n_regions,correlation,seed", [
+    (3, 3, 0.6, 0), (2, 4, 1.0, 7), (4, 2, 0.25, 13)])
+def test_correlated_failures_seeded(n_pools, n_regions, correlation, seed):
+    _check_correlated_failures(n_pools, n_regions, correlation, seed)
+
+
+def test_correlated_failures_region_specs():
+    fleet = synth_fleet(1, 2, 2)              # untagged
+    with pytest.raises(ValueError, match="no region tag"):
+        synth_failures(fleet, 1000.0, 100.0, 10.0, regions=True)
+    with pytest.raises(ValueError, match="correlation"):
+        synth_failures(fleet, 1000.0, 100.0, 10.0, regions=2,
+                       correlation=0.0)
+    with pytest.raises(ValueError, match="unknown pool"):
+        synth_failures(fleet, 1000.0, 100.0, 10.0,
+                       regions={"a": ["nope"]})
+    with pytest.raises(ValueError, match="more than one region"):
+        synth_failures(fleet, 1000.0, 100.0, 10.0,
+                       regions={"a": ["cloud-pod"], "b": ["cloud-pod"]})
+    with pytest.raises(ValueError, match="no pools"):
+        synth_failures(fleet, 1000.0, 100.0, 10.0, regions={"a": []})
+    # regions=False means off, like synth_fleet's disaggregate=False
+    assert (synth_failures(fleet, 5000.0, 1000.0, 100.0, regions=False)
+            == synth_failures(fleet, 5000.0, 1000.0, 100.0))
+    # int and explicit mappings work on untagged fleets
+    evs = synth_failures(fleet, 20_000.0, 2000.0, 100.0, seed=1,
+                         regions=2, correlation=1.0)
+    assert evs
+    evs = synth_failures(fleet, 20_000.0, 2000.0, 100.0, seed=1,
+                         regions={"edge": ["edge-large", "edge-small"]},
+                         correlation=1.0)
+    assert {e.worker for e in evs} <= {"edge-large", "edge-small"}
+
+
+def test_correlated_failures_drive_simulator(configdict):
+    """A correlated-region outage mid-trace exercises the kill/re-queue
+    path at fleet scale: every job still completes exactly once."""
+    from repro.core.scheduler import SynergAI
+    from repro.core.simulator import Simulator
+    fleet = synth_fleet(2, 3, 3, regions=3)
+    jobs = scenario(configdict, "mmpp", n_jobs=300, fleet=fleet, seed=2,
+                    utilization=1.1)
+    span = jobs[-1].arrival
+    failures = synth_failures(fleet, span, mtbf_s=0.5 * span,
+                              mttr_s=120.0, seed=2, regions=True,
+                              correlation=0.75)
+    assert len({(e.at, e.duration) for e in failures}) < len(failures)
+    res = Simulator(configdict, SynergAI(), fleet=fleet,
+                    failures=failures, seed=2).run(jobs)
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
