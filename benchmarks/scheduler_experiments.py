@@ -17,6 +17,14 @@ fleet-scale benches:
   (``synth_fleet(..., disaggregate=...)``).  Headline: disaggregation
   cuts TTFT violations (prefill pools turn over fast; decodes can't camp
   on them) at the cost of TPOT pressure on the shrunken decode side.
+* ``bench_sched_overhead`` — per-tick scheduler *decision* wall-clock
+  under a standing MMPP backlog with queue churn: the PR4 uncached
+  full-matrix path vs the incremental score-cache path
+  (``SynergAI(incremental=False)`` vs default) vs the Pallas backends
+  (v1 kernel, fused v2), sweeping J up to 50k jobs and W up to 256
+  pools.  Writes ``BENCH_SCHED.json`` (``--sched-json``) — the committed
+  copy at the repo root is the perf-trajectory baseline that
+  ``tools/check_perf_regression.py`` gates nightly CI against.
 * ``bench_traces`` — the trace-driven scenario subsystem: every policy on
   (a) a *replayed* mmpp overload trace (exported with ``save_trace``,
   fed back through ``replay`` — the SynergAI replay is checked
@@ -276,6 +284,110 @@ def bench_streaming(cd=None, n_jobs=1500, pools=(2, 5, 5),
     return out
 
 
+def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
+                                         (10_000, (8, 28, 28))),
+                         iters=40, churn=64, tick=1.0,
+                         pallas_max_j=2_000, utilization=0.8,
+                         emit=print):
+    """Per-tick scheduler decision time under a standing MMPP backlog.
+
+    A synthetic tick loop keeps the queue depth at ~J while churning it
+    exactly like the simulator does: each tick frees ``churn`` workers,
+    times one ``SynergAI.schedule`` call, applies the assignments
+    (placed jobs leave the queue, their workers go busy) and injects
+    ``churn`` fresh arrivals.  That makes the *incremental* cost visible:
+    the cached variant re-scores only the churn, the uncached variant
+    rebuilds the full [J, W] matrix every tick.  Pallas variants run in
+    interpret mode on CPU (the kernel emulated op-by-op — wall-clock is
+    not the point there; compiled numbers come from TPU hardware), so
+    they are capped at ``pallas_max_j`` by default."""
+    import numpy as np
+
+    from repro.core.job import exec_time
+    from repro.core.pallas_scoring import make_pallas_score_fn
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario
+
+    cd = cd or characterize()
+    variants = [
+        ("uncached", lambda: SynergAI(incremental=False)),
+        ("cached", lambda: SynergAI()),
+        ("pallas", lambda: SynergAI(score_fn=make_pallas_score_fn())),
+        ("pallas-v2",
+         lambda: SynergAI(score_fn=make_pallas_score_fn(v2=True))),
+    ]
+    results = []
+    for J, pools in sizes:
+        fleet = synth_fleet(*pools)
+        W = len(fleet)
+        base = {}
+        for name, mk in variants:
+            if name.startswith("pallas") and J > pallas_max_j:
+                continue
+            # fresh identical workload per variant (jobs are mutated by
+            # the churn loop below)
+            jobs = scenario(cd, "mmpp", n_jobs=J + iters * churn,
+                            fleet=fleet, utilization=utilization, seed=0)
+            queue = list(jobs[:J])
+            reservoir = jobs[J:]
+            now = queue[-1].arrival
+            pol = mk()
+            sim = Simulator(cd, pol, fleet=fleet, seed=0)
+            cl = sim.cluster
+            rng = np.random.default_rng(0)
+            names = cl.arrays.names
+            pol.schedule(now, queue, cl)        # warm caches / tracing
+            ticks, placed_total = [], 0
+            for i in range(iters):
+                now += tick
+                for wi in rng.choice(W, size=min(churn, W),
+                                     replace=False):
+                    cl.workers[names[wi]].busy_until = now
+                t0 = time.perf_counter()
+                asg = pol.schedule(now, queue, cl)
+                ticks.append(time.perf_counter() - t0)
+                placed = set()
+                for a in asg:
+                    cl.workers[a.worker].busy_until = (
+                        now + exec_time(a.entry, a.job.queries))
+                    placed.add(a.job.id)
+                placed_total += len(placed)
+                queue = [j for j in queue if j.id not in placed]
+                fresh = reservoir[i * churn:(i + 1) * churn]
+                for j in fresh:
+                    j.arrival = now
+                queue.extend(fresh)
+            mean_ms = 1e3 * float(np.mean(ticks))
+            p50_ms = 1e3 * float(np.median(ticks))
+            rec = {"variant": name, "J": J, "W": W, "serving": "job",
+                   "iters": iters, "churn": churn,
+                   "mean_tick_ms": mean_ms, "p50_tick_ms": p50_ms,
+                   "placed_per_tick": placed_total / iters}
+            if name == "uncached":
+                base[(J, W)] = mean_ms
+            if (J, W) in base:
+                rec["speedup_vs_uncached"] = base[(J, W)] / mean_ms
+            results.append(rec)
+            emit(f"sched_overhead,{name},J={J},W={W},"
+                 f"mean_tick_ms={mean_ms:.2f},p50_tick_ms={p50_ms:.2f},"
+                 f"speedup_vs_uncached="
+                 f"{rec.get('speedup_vs_uncached', 1.0):.2f}x")
+    head = [r for r in results
+            if r["variant"] == "cached" and r["J"] == 10_000]
+    blob = {"schema": 1, "bench": "bench_sched_overhead",
+            "configs": results}
+    if head:
+        blob["headline"] = {
+            "J": head[0]["J"], "W": head[0]["W"],
+            "cached_mean_tick_ms": head[0]["mean_tick_ms"],
+            "speedup_cached_vs_uncached":
+                head[0].get("speedup_vs_uncached", 1.0)}
+        emit(f"sched_overhead_headline,J={head[0]['J']},"
+             f"W={head[0]['W']},cached_vs_uncached="
+             f"{head[0].get('speedup_vs_uncached', 1.0):.2f}x,target=5x")
+    return blob
+
+
 def bench_traces(cd=None, n_jobs=1500, pools=(2, 5, 5), utilization=1.3,
                  n_regions=3, correlation=0.6, emit=print):
     """The trace-driven scenarios under every policy: a replayed mmpp
@@ -376,6 +488,16 @@ def main(argv=None):
                         "drift / correlated-region outage, bench_traces)")
     p.add_argument("--skip-fleet", action="store_true",
                    help="skip the fleet-scale bench_fleet run")
+    p.add_argument("--skip-sched", action="store_true",
+                   help="skip the per-tick scheduler-overhead bench "
+                        "(bench_sched_overhead)")
+    p.add_argument("--sched-big", action="store_true",
+                   help="extend bench_sched_overhead to the 50k-job x "
+                        "256-pool sweep (numpy backends only)")
+    p.add_argument("--sched-json", metavar="PATH", default=None,
+                   help="write the bench_sched_overhead results as JSON "
+                        "(the BENCH_SCHED.json schema; nightly CI gates "
+                        "it with tools/check_perf_regression.py)")
     p.add_argument("--json", metavar="PATH", default=None,
                    help="dump the serving/streaming bench summaries as "
                         "JSON (CI artifact)")
@@ -388,6 +510,17 @@ def main(argv=None):
     if not args.skip_scoring:
         print("# scoring: numpy vs Pallas kernel")
         bench_scoring(cd)
+    if not args.skip_sched:
+        print("# scheduler overhead: uncached vs score-cache vs Pallas")
+        sizes = [(2_000, (8, 28, 28)), (10_000, (8, 28, 28))]
+        if args.sched_big:
+            sizes.append((50_000, (86, 85, 85)))
+        sched = bench_sched_overhead(cd, sizes=tuple(sizes))
+        if args.sched_json:
+            import json
+            with open(args.sched_json, "w") as f:
+                json.dump(sched, f, indent=1)
+            print(f"# wrote {args.sched_json}")
     if not args.skip_serving:
         print("# serving bridge: job-level vs batched (mmpp overload)")
         blob["serving"] = bench_serving(cd)

@@ -79,30 +79,72 @@ class _EngineTable:
                                dtype=np.intp, count=len(jobs))
         return self.qps[rows], self.pre[rows], self.frac[rows]
 
+    def row(self, engine: str):
+        """One engine's (qps, preproc, decode_frac) rows over the worker
+        list — the per-arrival gather used by SLO-MAEL's vectorized
+        planner (profiles the engine on first sighting, like gather)."""
+        i = self.index.get(engine)
+        if i is None:
+            self._add(engine)
+            i = self.index[engine]
+        return self.qps[i], self.pre[i], self.frac[i]
 
-def _table(cd: ConfigDict, workers: List[str],
-           use_default: bool) -> _EngineTable:
+
+# Interned worker tuples: the row cache below used to be keyed by
+# ``(use_default, tuple(workers))`` — hashing a hundreds-of-strings tuple
+# on every scheduler tick.  Interning maps each distinct worker tuple to a
+# small int once, scoped to the ConfigDict (so the table dies with it);
+# per-tick callers (``Cluster.worker_token``) hold the int and skip the
+# tuple hash entirely, while one-shot callers still land on the same
+# cache entry through a single interning lookup.
+
+
+def intern_worker_tuple(cd: ConfigDict, workers) -> int:
+    """The generation id of a worker list on ``cd``: equal lists → equal
+    token (tokens from different ConfigDicts are unrelated — every cache
+    keyed by them lives on the same ConfigDict)."""
+    tokens = cd.__dict__.setdefault("_worker_tokens", {})
+    t = tuple(workers)
+    tok = tokens.get(t)
+    if tok is None:
+        tok = tokens[t] = len(tokens)
+    return tok
+
+
+def _table(cd: ConfigDict, workers: List[str], use_default: bool,
+           token: Optional[int] = None) -> _EngineTable:
     """The per-(use_default, worker-tuple) ``_EngineTable``, cached on the
-    ConfigDict (one cache shared by every matrix builder below)."""
+    ConfigDict (one cache shared by every matrix builder below).  ``token``
+    is the pre-interned worker-tuple id (``intern_worker_tuple``); passing
+    it skips re-hashing the tuple on the per-tick hot path."""
     cache = cd.__dict__.setdefault("_row_cache", {})
-    key = (use_default, tuple(workers))
+    key = (use_default,
+           intern_worker_tuple(cd, workers) if token is None else token)
     tab = cache.get(key)
     if tab is None:
         tab = cache[key] = _EngineTable(cd, workers, use_default)
     return tab
 
 
+def engine_rows(cd: ConfigDict, engine: str, workers: List[str],
+                use_default: bool = False, token: Optional[int] = None):
+    """One engine's (qps, preproc, decode_frac) vectors over ``workers``
+    (``qps == 0`` marks infeasible pools), from the shared row cache."""
+    return _table(cd, workers, use_default, token).row(engine)
+
+
 def score_matrices(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
-                   use_default: bool = False):
+                   use_default: bool = False, token: Optional[int] = None):
     """[J, W] qps / preproc matrices from the Configuration Dictionary
     (``qps == 0`` marks infeasible pairs), cached per worker tuple on the
     ConfigDict.  Shared input builder for the numpy scorer below and the
     Pallas kernel path (``repro.core.pallas_scoring``)."""
-    return _table(cd, workers, use_default).gather(jobs)[:2]
+    return _table(cd, workers, use_default, token).gather(jobs)[:2]
 
 
 def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
-                         workers: List[str], use_default: bool = False):
+                         workers: List[str], use_default: bool = False,
+                         token: Optional[int] = None):
     """[J, W] (prefill_s, decode_s) solo-service matrices (inf where
     infeasible): the prefill prefix ``pre + (q/qps) * (1 - decode_frac)``
     — a worker's TTFT contribution — and the per-token decode remainder
@@ -110,7 +152,7 @@ def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
     split is what streaming-QoS gating and phase-aware placement under
     disaggregated pools score against (shares the per-worker-tuple row
     cache with ``score_matrices``)."""
-    qps, pre, frac = _table(cd, workers, use_default).gather(jobs)
+    qps, pre, frac = _table(cd, workers, use_default, token).gather(jobs)
     q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
                     count=len(jobs))
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -121,10 +163,11 @@ def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
 
 
 def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
-                    now: float, use_default: bool = False) -> ScoreResult:
+                    now: float, use_default: bool = False,
+                    token: Optional[int] = None) -> ScoreResult:
     """Vectorized Eq. 1-4 over all queued jobs and all workers."""
     J = len(jobs)
-    qps, pre = score_matrices(cd, jobs, workers, use_default)
+    qps, pre = score_matrices(cd, jobs, workers, use_default, token)
     q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
                     count=J)
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -142,6 +185,11 @@ def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
     doomed = ~acceptable.any(axis=1)
     return ScoreResult(workers, t_est, t_rem, acceptable,
                        best.astype(np.int64), urgency, doomed)
+
+
+# score_fn protocol marker: SynergAI forwards the cluster's interned
+# worker token to backends that advertise support for it
+estimate_matrix.takes_token = True
 
 
 def candidate_order(score: ScoreResult, ji: int,

@@ -1,21 +1,35 @@
-"""SynergAI scoring on the Pallas kernel — a drop-in ``score_fn``.
+"""SynergAI scoring on the Pallas kernels — drop-in ``score_fn``s.
 
-``make_pallas_score_fn`` builds the dense ``[J, W]`` qps/preproc matrices
-from the Configuration Dictionary (cached rows shared with the numpy
-estimator via ``score_matrices``), runs
+``make_pallas_score_fn()`` builds the dense ``[J, W]`` qps/preproc
+matrices from the Configuration Dictionary (cached rows shared with the
+numpy estimator via ``score_matrices``), runs
 ``repro.kernels.scheduler_score`` — interpret mode on CPU, compiled on
 TPU — and adapts the outputs to ``ScoreResult`` so that
 
     SynergAI(score_fn=make_pallas_score_fn())
 
-is a drop-in replacement for the default numpy path.  Parity (identical
-assignments at fleet scale, padding edges included) is enforced by
-``tests/test_pallas_parity.py`` over profiled catalogues.  One caveat:
-the kernel scores in float32, so a job whose remaining QoS budget ties
-its estimated time to the last float64 bit can flip between acceptable
-and doomed relative to the numpy scorer — real profiles keep orders of
-magnitude more margin than that, but exact boundary ties are not part of
-the guarantee.
+is a drop-in replacement for the default numpy path.
+
+``make_pallas_score_fn(v2=True)`` returns the *fused* backend instead:
+``repro.kernels.scheduler_score.scheduler_score_v2`` folds the batched
+queue-depth penalty, the prefill/decode phase slicing of disaggregated
+pools, and the TTFT/TPOT streaming gates into the same kernel pass, so
+
+    SynergAI(score_fn=make_pallas_score_fn(v2=True))
+
+covers ``serving="batched"`` + streaming scoring on-accelerator with no
+numpy post-processing.  The fused callable carries ``fused = True`` and
+is invoked by ``SynergAI`` with the cached solo matrices
+(``repro.core.scorecache``) plus the per-tick cluster vectors — see
+``SynergAI._schedule_fused`` for the exact contract.
+
+Parity (identical assignments at fleet scale, padding edges included) is
+enforced by ``tests/test_pallas_parity.py`` over profiled catalogues.
+One caveat: the kernels score in float32, so a job whose remaining QoS
+budget ties its estimated time to the last float64 bit can flip between
+acceptable and doomed relative to the numpy scorer — real profiles keep
+orders of magnitude more margin than that, but exact boundary ties are
+not part of the guarantee.
 """
 
 from __future__ import annotations
@@ -25,17 +39,21 @@ import numpy as np
 from repro.core.estimator import ScoreResult, score_matrices
 
 
-def make_pallas_score_fn(bj: int = 128, interpret: bool = True):
+def make_pallas_score_fn(bj: int = 128, interpret: bool = True,
+                         v2: bool = False):
+    if v2:
+        return _make_fused_score_fn(bj, interpret)
     from repro.kernels.scheduler_score import scheduler_score
 
-    def score_fn(cd, jobs, workers, now, use_default=False) -> ScoreResult:
+    def score_fn(cd, jobs, workers, now, use_default=False,
+                 token=None) -> ScoreResult:
         t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])
         if not jobs:
             z = np.zeros((0, len(workers)))
             return ScoreResult(list(workers), z, t_rem, z.astype(bool),
                                np.zeros(0, np.int64), np.zeros(0),
                                np.zeros(0, bool))
-        qps, pre = score_matrices(cd, jobs, workers, use_default)
+        qps, pre = score_matrices(cd, jobs, workers, use_default, token)
         q = np.array([float(j.queries) for j in jobs], np.float32)
         est, best, urg, acc = scheduler_score(
             qps.astype(np.float32), pre.astype(np.float32), q,
@@ -49,4 +67,28 @@ def make_pallas_score_fn(bj: int = 128, interpret: bool = True):
                            np.asarray(urg, np.float64),
                            ~acceptable.any(axis=1))
 
+    score_fn.takes_token = True
     return score_fn
+
+
+def _make_fused_score_fn(bj: int, interpret: bool):
+    from repro.kernels.scheduler_score import scheduler_score_v2
+
+    def fused_score(t_solo, pre_m, dec_m, t_rem, pen, phase, has_ttft,
+                    has_tpot, ttft_rem, tpot_qos, dtok):
+        """(t_eff, acceptable, urgency, doomed) — the fused batched +
+        streaming + disaggregated scoring pass, as float64/bool numpy
+        (``inf`` marks infeasible pairs, exactly like the numpy path)."""
+        f32 = lambda a: np.asarray(a, np.float32)
+        est, acc, urg, doom = scheduler_score_v2(
+            f32(t_solo), f32(pre_m), f32(dec_m), f32(t_rem), f32(pen),
+            np.asarray(phase, np.int32), np.asarray(has_ttft, np.int32),
+            np.asarray(has_tpot, np.int32), f32(ttft_rem), f32(tpot_qos),
+            f32(dtok), bj=bj, interpret=interpret)
+        return (np.asarray(est, np.float64),
+                np.asarray(acc).astype(bool),
+                np.asarray(urg, np.float64),
+                np.asarray(doom).astype(bool))
+
+    fused_score.fused = True
+    return fused_score

@@ -9,13 +9,31 @@ update (simulator tick) reassesses all waiting jobs.
 Unlike every baseline, assignments use the *optimal* per-(engine, worker)
 configuration c*_{j,w} from the offline Configuration Dictionary.
 
+The hot path is **incremental across ticks** (docs/performance.md): a
+``repro.core.scorecache.ScoreCache`` persists each job's Eq. 2 row —
+``t_estimated`` is time-invariant per (job, worker-set) — so a tick only
+recomputes the time-decaying quantities (``t_remaining``, urgency, doom)
+as O(J) vector ops, appends rows for arrivals, extends columns on elastic
+provisioning, and flushes on fleet-generation changes.  Per-worker state
+(availability, backlog, batch depth, admission) reads the ``Cluster``
+struct-of-arrays mirror as O(W) vector ops instead of Python loops.  On
+the plain path placement is *lazy*: candidate rows are evaluated in
+urgency order only until the open slots are filled, so the per-tick cost
+stays sublinear in queue depth (the PerLLM deployability argument,
+arXiv:2405.14636).  ``SynergAI(incremental=False)`` preserves the
+full-matrix path; both produce bit-for-bit identical schedules
+(``tests/test_scorecache.py``, plus the pinned golden digests).
+
 The placement pass is fully vectorized for fleet scale (thousands of queued
 jobs x hundreds of pools): per-job candidate walks become masked argmins
 over a shared cost matrix — provably the same assignment as walking the
 stable-sorted candidate list, since ``argmin`` breaks ties at the lowest
 worker index exactly like a stable sort does.  ``score_fn`` swaps the
-scoring backend: the numpy estimator by default, or the Pallas kernel via
-``repro.core.pallas_scoring.make_pallas_score_fn``.
+scoring backend: the numpy estimator by default, the Eq. 2-4 Pallas kernel
+via ``repro.core.pallas_scoring.make_pallas_score_fn()``, or the fused v2
+kernel (``make_pallas_score_fn(v2=True)``) that additionally folds the
+batched depth penalty, the prefill/decode phase split and the TTFT/TPOT
+streaming gates into one on-accelerator pass.
 
 Under the batched serving bridge (``Simulator(..., serving="batched")``)
 the estimates become *queue-depth-aware*: every worker's column is scaled
@@ -23,7 +41,7 @@ by ``Cluster.depth_penalty`` (joining a batch of ``b`` members runs
 ``1 + alpha * b`` slower than solo), acceptability and doom are
 re-derived from the adjusted times, and eligibility is intersected with
 the bridge's batch-formation rules (same-engine batches under slot/KV
-budgets) via ``Cluster.admit_engine_ok``.
+budgets) via ``Cluster.admit_engine_mask``.
 
 Streaming QoS (``Request.ttft_qos`` / ``tpot_qos``) tightens the gate
 further: acceptability requires the *tighter* of the end-to-end, TTFT and
@@ -41,39 +59,205 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.engines import engine_catalogue
 from repro.core.estimator import estimate_matrix, phase_split_matrices
-from repro.core.simulator import Assignment, Cluster, Policy
+from repro.core.scorecache import ScoreCache
+from repro.core.simulator import (PHASE_CODE, PHASE_NAME, Assignment,
+                                  Cluster, Policy)
 
 
 class SynergAI(Policy):
     name = "SynergAI"
     use_default_config = False
 
-    def __init__(self, score_fn=None):
-        # score_fn: optional accelerated scorer (Pallas kernel at fleet
-        # scale); defaults to the numpy estimator.
+    def __init__(self, score_fn=None, incremental: bool = True):
+        # score_fn: optional accelerated scorer — the Eq. 2-4 Pallas
+        # kernel, or the fused v2 kernel (``fused`` attribute) which also
+        # consumes the depth penalty / phase split / streaming gates.
+        # incremental=False disables the cross-tick score cache (the
+        # uncached reference path, e.g. for the perf bench baseline).
         self.score_fn = score_fn or estimate_matrix
+        self._fused = bool(getattr(score_fn, "fused", False))
+        self._takes_token = bool(getattr(self.score_fn, "takes_token",
+                                         False))
+        # a conventional custom score_fn builds its own matrices, so the
+        # row cache would be dead weight; the fused kernel reads its
+        # matrices *from* the cache, so it always carries one
+        self.cache: Optional[ScoreCache] = (
+            ScoreCache() if self._fused
+            or (incremental and score_fn is None) else None)
 
     def schedule(self, now, queue, cluster: Cluster) -> List[Assignment]:
         if not queue:
             return []
-        workers = list(cluster.workers)
-        avail = np.array([cluster.workers[w].idle(now) for w in workers])
+        avail = cluster.avail_array(now)
         if not avail.any():
             # nothing can start this tick; scoring the whole queue would
             # change no assignment (the placement below only dispatches
-            # onto idle workers), so skip the [J, W] pass — the dominant
+            # onto idle workers), so skip the scoring pass — the dominant
             # cost under fleet-scale backlog.
             return []
-        score = self.score_fn(cluster.cd, queue, workers, now,
-                              use_default=False)
-        busy_wait = np.array([max(0.0, cluster.workers[w].busy_until - now,
-                                  cluster.workers[w].failed_until - now)
-                              for w in workers])
+        if self.cache is not None:
+            return self._schedule_cached(now, queue, cluster, avail)
+        return self._schedule_full(now, queue, cluster, avail)
+
+    # ------------------------------------------------------------------
+    # incremental path (default): cached rows + O(J) time decay
+
+    def _schedule_cached(self, now, queue, cluster, avail):
+        cd = cluster.cd
+        cache = self.cache
+        slots = cache.sync(cd, queue, cluster)
+        t_rem = cache.t_remaining(slots, now)
+        batched = getattr(cluster, "serving", "job") == "batched"
+        disagg = getattr(cluster, "disaggregated", False)
+        has_ttft = cache.has_ttft(slots)
+        has_tpot = cache.has_tpot(slots)
+        streaming = bool(has_ttft.any() or has_tpot.any())
+        pen = (cluster.depth_penalty_array(now) if batched
+               else np.ones(len(avail)))
+        penalized = batched and bool((pen != 1.0).any())
+        if streaming or disagg:
+            cache.ensure_phase_rows(cd, queue, slots, cluster)
+        if self._fused:
+            return self._schedule_fused(now, queue, cluster, avail, slots,
+                                        t_rem, pen, has_ttft, has_tpot,
+                                        batched, disagg, streaming)
+        if not (disagg or streaming or penalized):
+            # the plain tick: every cached row is still exact, so only
+            # Eq. 1's decay moves — urgency and doom are O(J) vector ops
+            # (doomed == "no acceptable worker" == t_rem < min_w t_est)
+            # and placement walks rows lazily until the slots are filled
+            min_est = cache.min_estimate(slots)
+            urgency = t_rem - min_est
+            doomed = t_rem < min_est
+            return self._place_lazy(now, queue, cluster, avail, cache,
+                                    slots, t_rem, urgency, doomed, batched)
+        # batching / phases / deadlines re-derive the whole matrix from
+        # the cached rows (still no ConfigDict gathers, no per-job Python)
+        t = cache.t_matrix(slots)
+        phase = np.zeros(len(queue), dtype=np.int8)
+        if streaming or disagg:
+            pre_m, dec_m = cache.phase_matrices(slots)
+        if disagg:
+            phase = np.fromiter(
+                (PHASE_CODE[cluster.phase_of(j)] for j in queue),
+                dtype=np.int8, count=len(queue))
+            t = np.where((phase == 1)[:, None], pre_m,
+                         np.where((phase == 2)[:, None], dec_m, t))
+        if penalized:
+            t = t * pen[None, :]
+        acceptable = t_rem[:, None] >= t
+        urgency = t_rem - cache.min_estimate(slots)
+        if streaming:
+            wait = cache.waiting(slots, now)
+            ttft_qos = cache.ttft_qos(slots)
+            tpot_qos = cache.tpot_qos(slots)
+            dtok = cache.dtok(slots)
+            ttft_rem = ttft_qos - wait
+            ttft_est = pre_m * pen[None, :]
+            tpot_est = dec_m * pen[None, :] / dtok[:, None]
+            ok_ttft = ((~has_ttft | (phase == 2))[:, None]
+                       | (ttft_est <= ttft_rem[:, None]))
+            ok_tpot = ((~has_tpot | (phase == 1))[:, None]
+                       | (tpot_est <= tpot_qos[:, None]))
+            acceptable = acceptable & ok_ttft & ok_tpot
+            with np.errstate(invalid="ignore"):
+                ttft_slack = ttft_rem - np.min(ttft_est, axis=1)
+            urgency = np.where(has_ttft & (phase != 2),
+                               np.minimum(urgency, ttft_slack), urgency)
+        doomed = ~acceptable.any(axis=1)
+        return self._place(now, queue, cluster, avail, t, acceptable,
+                           urgency, doomed, batched, phase)
+
+    def _place_lazy(self, now, queue, cluster, avail, cache, slots, t_rem,
+                    urgency, doomed, batched):
+        """Order by (urgency, doomed) and evaluate candidate rows one at
+        a time, stopping once every open slot is filled — identical
+        assignments to the full masked-argmin pass (same per-row
+        expressions, same tie-breaks), without materializing [J, W]."""
+        order = np.lexsort((urgency, doomed))
+        busy_wait = (cluster.busy_wait_array(now) if doomed.any()
+                     else None)
+        emask = {} if batched else None
+        names = cluster.arrays.names
+        cd = cluster.cd
+        out: List[Assignment] = []
+        open_slots = avail.copy()
+        n_open = int(open_slots.sum())
+        for ji in order:
+            row = cache.row(slots[ji])
+            if doomed[ji]:
+                feas = np.isfinite(row)
+                cost = row + busy_wait
+                best = np.where(feas, cost, np.inf).min()
+                elig = feas & (row <= 1.5 * best)
+            else:
+                cost = row
+                elig = t_rem[ji] >= row
+            open_row = open_slots
+            if batched:
+                eng = queue[ji].engine       # phase is "full" on this path
+                m = emask.get(eng)
+                if m is None:
+                    m = emask[eng] = cluster.admit_engine_mask(eng, now)
+                open_row = open_slots & m
+            cand = np.where(open_row & elig, cost, np.inf)
+            wi = int(cand.argmin())
+            if np.isfinite(cand[wi]):
+                w = names[wi]
+                job = queue[ji]
+                out.append(Assignment(job, w,
+                                      cd.optimal(job.engine, w)))
+                open_slots[wi] = False
+                n_open -= 1
+                if n_open == 0:
+                    break
+        return out
+
+    # ------------------------------------------------------------------
+    # fused Pallas path: depth penalty + phase split + streaming gates
+    # run inside the kernel; the cache supplies its input matrices
+
+    def _schedule_fused(self, now, queue, cluster, avail, slots, t_rem,
+                        pen, has_ttft, has_tpot, batched, disagg,
+                        streaming):
+        cache = self.cache
+        t0 = cache.t_matrix(slots)
+        if streaming or disagg:
+            pre_m, dec_m = cache.phase_matrices(slots)
+        else:
+            pre_m = dec_m = t0      # gates are off: placeholders
+        phase = np.zeros(len(queue), dtype=np.int8)
+        if disagg:
+            phase = np.fromiter(
+                (PHASE_CODE[cluster.phase_of(j)] for j in queue),
+                dtype=np.int8, count=len(queue))
+        ttft_rem = cache.ttft_qos(slots) - cache.waiting(slots, now)
+        t, acceptable, urgency, doomed = self.score_fn(
+            t0, pre_m, dec_m, t_rem, pen, phase, has_ttft, has_tpot,
+            ttft_rem, cache.tpot_qos(slots), cache.dtok(slots))
+        return self._place(now, queue, cluster, avail, t, acceptable,
+                           urgency, doomed, batched, phase)
+
+    # ------------------------------------------------------------------
+    # reference path: full [J, W] rebuild every tick (incremental=False,
+    # or a conventional custom score_fn)
+
+    def _schedule_full(self, now, queue, cluster, avail):
+        workers = cluster.arrays.names
+        if self._takes_token:
+            score = self.score_fn(cluster.cd, queue, workers, now,
+                                  use_default=False,
+                                  token=cluster.worker_token)
+        else:
+            score = self.score_fn(cluster.cd, queue, workers, now,
+                                  use_default=False)
         t = score.t_estimated
         doomed = score.doomed
         acceptable = score.acceptable
         urgency = score.urgency
+        t_rem = score.t_remaining
         batched = getattr(cluster, "serving", "job") == "batched"
         disagg = getattr(cluster, "disaggregated", False)
         reqs = [j.request for j in queue]
@@ -84,17 +268,17 @@ class SynergAI(Policy):
         streaming = bool(has_ttft.any() or has_tpot.any())
         changed = False
         pen = np.ones(len(workers))
-        phase = np.zeros(len(queue), dtype=np.int8)   # 0 full/1 prefill/2 decode
+        phase = np.zeros(len(queue), dtype=np.int8)   # PHASE_CODE values
         if disagg or streaming:
             pre_m, dec_m = phase_split_matrices(cluster.cd, queue, workers,
-                                                use_default=False)
+                                                use_default=False,
+                                                token=cluster.worker_token)
         if disagg:
             # phase-aware service times: a prefill-phase job costs a
             # worker only its prefill prefix, a decode-phase job only the
             # decode remainder (the handoff already happened)
             phase = np.fromiter(
-                ({"full": 0, "prefill": 1, "decode": 2}[
-                    cluster.phase_of(j)] for j in queue),
+                (PHASE_CODE[cluster.phase_of(j)] for j in queue),
                 dtype=np.int8, count=len(queue))
             t = np.where((phase == 1)[:, None], pre_m,
                          np.where((phase == 2)[:, None], dec_m, t))
@@ -104,13 +288,12 @@ class SynergAI(Policy):
             # the job's service rate; re-derive Eq. 3/4 from the
             # penalized estimates (identical to the plain path whenever
             # every batch is empty, e.g. max_batch=1 with free workers)
-            pen = np.array([cluster.depth_penalty(w, now)
-                            for w in workers])
+            pen = cluster.depth_penalty_array(now)
             if (pen != 1.0).any():
                 t = t * pen[None, :]
                 changed = True
         if changed:
-            acceptable = score.t_remaining[:, None] >= t
+            acceptable = t_rem[:, None] >= t
         if streaming:
             # gate on the tighter of (latency, TTFT, TPOT) headroom: a
             # worker is acceptable only if every deadline the job carries
@@ -118,7 +301,6 @@ class SynergAI(Policy):
             # like t_remaining; TPOT is a pure rate constraint.  A decode-
             # phase job's TTFT is already history, a prefill-phase job's
             # TPOT belongs to its later decode placement.
-            from repro.core.engines import engine_catalogue
             engines = engine_catalogue()
             wait = np.fromiter((now - j.arrival for j in queue),
                                dtype=np.float64, count=len(queue))
@@ -155,6 +337,14 @@ class SynergAI(Policy):
             changed = True
         if changed:
             doomed = ~acceptable.any(axis=1)
+        return self._place(now, queue, cluster, avail, t, acceptable,
+                           urgency, doomed, batched, phase)
+
+    # ------------------------------------------------------------------
+    # shared placement tail (full-matrix variant)
+
+    def _place(self, now, queue, cluster, avail, t, acceptable, urgency,
+               doomed, batched, phase):
         # order: urgent first (2D Ordered Job Queue); doomed jobs last.
         # lexsort is stable, so ties keep queue order like sorted() did.
         order = np.lexsort((urgency, doomed))
@@ -166,6 +356,7 @@ class SynergAI(Policy):
         # slower idle one and blocking it for everyone else.
         feasible = np.isfinite(t)
         if doomed.any():
+            busy_wait = cluster.busy_wait_array(now)
             cost = np.where(doomed[:, None], t + busy_wait[None, :], t)
             best_cost = np.where(feasible, cost, np.inf).min(axis=1)
             elig = np.where(doomed[:, None],
@@ -176,19 +367,26 @@ class SynergAI(Policy):
             elig = acceptable
         if batched:
             # batch-formation rules: a live batch only admits its own
-            # engine, under the slot and KV-cache budgets — and, under
-            # disaggregated pools, the phase-role match
-            keys = {(j.engine, cluster.phase_of(j)) for j in queue}
-            emask = {k: np.fromiter(
-                (cluster.admit_engine_ok(k[0], w, now, phase=k[1])
-                 for w in workers), dtype=bool, count=len(workers))
-                for k in keys}
-            elig = elig & np.stack(
-                [emask[(j.engine, cluster.phase_of(j))] for j in queue])
+            # engine, under the slot and KV budgets — and, under
+            # disaggregated pools, the phase-role match (one O(W) vector
+            # mask per distinct (engine, phase) key, reusing the phase
+            # codes computed above instead of re-deriving them per job)
+            emask = {}
+            rows = []
+            for qi, j in enumerate(queue):
+                k = (j.engine, int(phase[qi]))
+                m = emask.get(k)
+                if m is None:
+                    m = emask[k] = cluster.admit_engine_mask(
+                        j.engine, now, PHASE_NAME[k[1]])
+                rows.append(m)
+            elig = elig & np.stack(rows)
         ranked = np.where(elig, cost, np.inf)
         # jobs with no eligible idle worker can never place this round
         live = np.isfinite(ranked[:, avail]).any(axis=1)
 
+        names = cluster.arrays.names
+        cd = cluster.cd
         out: List[Assignment] = []
         open_slots = avail.copy()
         n_open = int(open_slots.sum())
@@ -198,10 +396,9 @@ class SynergAI(Policy):
             cand = np.where(open_slots, ranked[ji], np.inf)
             wi = int(cand.argmin())
             if np.isfinite(cand[wi]):
-                w = workers[wi]
+                w = names[wi]
                 job = queue[ji]
-                out.append(Assignment(job, w, cluster.cd.optimal(job.engine,
-                                                                 w)))
+                out.append(Assignment(job, w, cd.optimal(job.engine, w)))
                 open_slots[wi] = False
                 n_open -= 1
                 if n_open == 0:

@@ -70,6 +70,25 @@ class WorkerSim:
     failed_until: float = 0.0      # fault injection
     slowdown: float = 1.0          # straggler injection
 
+    def __setattr__(self, name, value):
+        # write-through into the Cluster's struct-of-arrays mirror
+        # (attached lazily by Cluster._build_arrays): scalar state stays
+        # authoritative on the instance, the arrays feed the schedulers'
+        # O(W) vector ops.  A failure write also bumps the cluster's
+        # failure generation, the score-cache invalidation signal.
+        object.__setattr__(self, name, value)
+        if name == "busy_until":
+            a = self.__dict__.get("_arrays")
+            if a is not None:
+                a.busy_until[self._aidx] = value
+        elif name == "failed_until":
+            a = self.__dict__.get("_arrays")
+            if a is not None:
+                a.failed_until[self._aidx] = value
+            c = self.__dict__.get("_cluster")
+            if c is not None:
+                c._fail_gen += 1
+
     def idle(self, now: float) -> bool:
         return self.busy_until <= now and self.failed_until <= now
 
@@ -129,6 +148,21 @@ class BatchedWorkerSim(WorkerSim):
         return (not self.active
                 or len(self.active) < min(self.max_batch, self.kv_limit))
 
+    def _sync_batch(self):
+        """Mirror the batch state (depth, slot budget, engine lock,
+        alpha) into the cluster's struct-of-arrays after every membership
+        change — ``active`` is a dict, so ``__setattr__`` can't see it."""
+        a = self.__dict__.get("_arrays")
+        if a is None:
+            return
+        i = self._aidx
+        a.depth[i] = len(self.active)
+        a.slot_cap[i] = min(self.max_batch, self.kv_limit)
+        eng = self.batch_engine
+        a.engine_id[i] = (-1 if eng is None
+                          else self._cluster.engine_code(eng))
+        a.alpha[i] = self.batch_alpha_
+
     def idle(self, now: float) -> bool:
         return (self.busy_until <= now and self.failed_until <= now
                 and self._has_slot())
@@ -179,6 +213,7 @@ class BatchedWorkerSim(WorkerSim):
         self.active[jid] = f
         self.admitted += 1
         self.peak_batch = max(self.peak_batch, len(self.active))
+        self._sync_batch()
 
     def finish(self, jid: int) -> Optional[_InFlight]:
         """Retire a fully-served member; tokens count here and only here,
@@ -191,6 +226,7 @@ class BatchedWorkerSim(WorkerSim):
         if not self.active:
             self.batch_engine = None
             self.batch_entry = None
+        self._sync_batch()
         return f
 
     def on_failure(self, now: float):
@@ -200,6 +236,7 @@ class BatchedWorkerSim(WorkerSim):
         self.active.clear()
         self.batch_engine = None
         self.batch_entry = None
+        self._sync_batch()
 
 
 @dataclasses.dataclass
@@ -245,6 +282,90 @@ class FailureEvent:
     duration: float
 
 
+# pool roles / serving phases as small ints for the vectorized masks.
+# ROLE_CODE["both"] == PHASE_CODE["full"] == 0, so the role gate is the
+# single vector op ``(role == 0) | (role == PHASE_CODE[phase])``: a
+# whole-job placement only passes "both" pools, a phase-sliced one its
+# matching specialized pools plus "both" — exactly ``Cluster.role_ok``.
+ROLE_CODE = {"both": 0, "prefill": 1, "decode": 2}
+PHASE_CODE = {"full": 0, "prefill": 1, "decode": 2}
+PHASE_NAME = {0: "full", 1: "prefill", 2: "decode"}
+
+
+@dataclasses.dataclass(eq=False)
+class _FleetArrays:
+    """Struct-of-arrays mirror of ``Cluster.workers`` (docs/performance.md).
+
+    One slot per worker, in dict insertion order.  ``busy_until`` /
+    ``failed_until`` are written through by ``WorkerSim.__setattr__``,
+    the batch columns by ``BatchedWorkerSim._sync_batch``; membership
+    changes (elastic clones) rebuild the whole mirror lazily.  Schedulers
+    read these for O(W) vector availability / penalty / admission masks
+    instead of Python loops over the worker dict."""
+
+    names: List[str]
+    index: Dict[str, int]
+    busy_until: np.ndarray        # [W] f64
+    failed_until: np.ndarray      # [W] f64
+    role: np.ndarray              # [W] i8, ROLE_CODE of pool.role
+    depth: np.ndarray             # [W] i32, live batch size (0 in job mode)
+    slot_cap: np.ndarray          # [W] i32, min(max_batch, kv_limit)
+    engine_id: np.ndarray         # [W] i32, interned batch engine (-1 none)
+    alpha: np.ndarray             # [W] f64, live batch_alpha_
+
+
+class _WorkerDict(dict):
+    """``Cluster.workers``: a plain dict plus membership hooks, so adding
+    or retiring a pool (elastic scaling) invalidates the struct-of-arrays
+    mirror and bumps the fleet generation without any caller changes."""
+
+    def __init__(self, cluster: "Cluster"):
+        super().__init__()
+        self._cluster = cluster
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self._cluster._fleet_changed()
+
+    def __delitem__(self, key):
+        super().__delitem__(key)
+        self._cluster._fleet_changed()
+
+    # every other mutator must invalidate too — a membership change that
+    # slipped past the hooks would leave schedulers scoring ghost columns
+    def pop(self, key, *default):
+        had = key in self
+        out = super().pop(key, *default)
+        if had:
+            self._cluster._fleet_changed()
+        return out
+
+    def popitem(self):
+        out = super().popitem()
+        self._cluster._fleet_changed()
+        return out
+
+    def clear(self):
+        had = bool(self)
+        super().clear()
+        if had:
+            self._cluster._fleet_changed()
+
+    def update(self, *args, **kwargs):
+        super().update(*args, **kwargs)
+        self._cluster._fleet_changed()
+
+    def setdefault(self, key, default=None):
+        had = key in self
+        out = super().setdefault(key, default)
+        if not had:
+            self._cluster._fleet_changed()
+        return out
+
+
+_CLUSTER_SERIAL = itertools.count()
+
+
 class Cluster:
     def __init__(self, cd: ConfigDict, fleet: Optional[Sequence[WorkerPool]]
                  = None, serving: str = "job", max_batch: int = 8,
@@ -253,8 +374,19 @@ class Cluster:
         self.serving = serving
         self._max_batch = max_batch
         self._batch_alpha = batch_alpha
-        self.workers: Dict[str, WorkerSim] = {
-            w.name: self._make_worker(w) for w in (fleet or default_fleet())}
+        # struct-of-arrays state: the mirror itself (built lazily), the
+        # membership / failure generations (score-cache invalidation), a
+        # process-unique serial (so caches never confuse two clusters),
+        # and the interned engine ids for the batch-engine column
+        self.serial = next(_CLUSTER_SERIAL)
+        self._arrays: Optional[_FleetArrays] = None
+        self._member_gen = 0
+        self._fail_gen = 0
+        self._worker_token: Optional[int] = None
+        self._engine_code: Dict[str, int] = {}
+        self.workers: Dict[str, WorkerSim] = _WorkerDict(self)
+        for w in (fleet or default_fleet()):
+            self.workers[w.name] = self._make_worker(w)
         # prefill/decode disaggregation (docs/serving_bridge.md): pools
         # carry a phase role, jobs move through prefill -> decode phases
         # tracked here (maintained by the simulator); a whole-job cluster
@@ -265,9 +397,121 @@ class Cluster:
 
     def _make_worker(self, pool: WorkerPool) -> WorkerSim:
         if self.serving == "batched":
-            return BatchedWorkerSim(pool, max_batch=self._max_batch,
-                                    alpha_override=self._batch_alpha)
-        return WorkerSim(pool)
+            ws = BatchedWorkerSim(pool, max_batch=self._max_batch,
+                                  alpha_override=self._batch_alpha)
+        else:
+            ws = WorkerSim(pool)
+        ws._cluster = self        # failure writes bump self._fail_gen
+        return ws
+
+    # -- struct-of-arrays mirror + generations -------------------------
+
+    def _fleet_changed(self):
+        self._arrays = None
+        self._member_gen += 1
+        self._worker_token = None
+
+    @property
+    def fleet_gen(self) -> int:
+        """Monotone fleet generation: bumps on every membership change
+        (elastic clone added/retired) and every failure injection — the
+        coarse invalidation token for cross-tick score caches."""
+        return self._member_gen + self._fail_gen
+
+    @property
+    def fail_gen(self) -> int:
+        """Failure-only generation (membership changes excluded): lets a
+        score cache distinguish an appended clone (extend columns) from a
+        failure (flush)."""
+        return self._fail_gen
+
+    @property
+    def worker_token(self) -> int:
+        """Interned id of the current worker-name tuple (see
+        ``estimator.intern_worker_tuple``): the cheap per-tick cache key
+        that replaces hashing hundreds of pool names every call."""
+        tok = self._worker_token
+        if tok is None:
+            from repro.core.estimator import intern_worker_tuple
+            tok = self._worker_token = intern_worker_tuple(self.cd,
+                                                           self.workers)
+        return tok
+
+    def engine_code(self, engine: str) -> int:
+        code = self._engine_code.get(engine)
+        if code is None:
+            code = self._engine_code[engine] = len(self._engine_code)
+        return code
+
+    @property
+    def arrays(self) -> _FleetArrays:
+        a = self._arrays
+        if a is None:
+            a = self._arrays = self._build_arrays()
+        return a
+
+    def _build_arrays(self) -> _FleetArrays:
+        names = list(self.workers)
+        W = len(names)
+        a = _FleetArrays(
+            names=names, index={n: i for i, n in enumerate(names)},
+            busy_until=np.empty(W), failed_until=np.empty(W),
+            role=np.zeros(W, np.int8), depth=np.zeros(W, np.int32),
+            slot_cap=np.ones(W, np.int32),
+            engine_id=np.full(W, -1, np.int32), alpha=np.full(W, 0.5))
+        batched = self.serving == "batched"
+        for i, ws in enumerate(self.workers.values()):
+            a.busy_until[i] = ws.busy_until
+            a.failed_until[i] = ws.failed_until
+            a.role[i] = ROLE_CODE[ws.pool.role]
+            ws._arrays = a
+            ws._aidx = i
+            if batched:
+                ws._sync_batch()
+        return a
+
+    # -- vectorized scheduler views (O(W), no Python worker loops) -----
+
+    def avail_array(self, now: float) -> np.ndarray:
+        """[W] bool: ``WorkerSim.idle`` over the whole fleet (in batched
+        mode: a free slot under the max-batch / KV budgets)."""
+        a = self.arrays
+        free = (a.busy_until <= now) & (a.failed_until <= now)
+        if self.serving == "batched":
+            free &= (a.depth == 0) | (a.depth < a.slot_cap)
+        return free
+
+    def busy_wait_array(self, now: float) -> np.ndarray:
+        """[W] f64: seconds until each worker frees (0 when idle)."""
+        a = self.arrays
+        return np.maximum(0.0, np.maximum(a.busy_until - now,
+                                          a.failed_until - now))
+
+    def depth_penalty_array(self, now: float) -> np.ndarray:
+        """[W] f64: ``depth_penalty`` over the whole fleet in one shot."""
+        a = self.arrays
+        pen = np.ones(len(a.names))
+        if self.serving == "batched":
+            m = ((a.depth > 0) & (a.busy_until <= now)
+                 & (a.failed_until <= now) & (a.depth < a.slot_cap))
+            if m.any():
+                pen[m] = 1.0 + a.alpha[m] * a.depth[m]
+        return pen
+
+    def admit_engine_mask(self, engine: str, now: float,
+                          phase: str = "full") -> np.ndarray:
+        """[W] bool: ``admit_engine_ok`` over the whole fleet — the
+        batch-formation + phase-role gate as one vector op instead of
+        ``keys x W`` Python calls per tick."""
+        a = self.arrays
+        ok = (a.busy_until <= now) & (a.failed_until <= now)
+        if self.disaggregated:
+            ok &= (a.role == 0) | (a.role == PHASE_CODE[phase])
+        if self.serving == "batched":
+            ok &= (a.depth == 0) | (a.depth < a.slot_cap)
+            eid = self._engine_code.get(engine, -2)   # -2: never batched
+            ok &= (a.engine_id == -1) | (a.engine_id == eid)
+        return ok
 
     def idle_workers(self, now: float) -> List[str]:
         return [n for n, w in self.workers.items() if w.idle(now)]
@@ -457,6 +701,10 @@ class Simulator:
     # ------------------------------------------------------------------
 
     def run(self, jobs: Sequence[Job]) -> List[JobResult]:
+        # a new run is a new world: bump the failure generation so any
+        # cross-tick score cache (keyed by job id) starts from scratch
+        # even if this simulator is reused with a different job set
+        self.cluster._fail_gen += 1
         pending = sorted(jobs, key=lambda j: j.arrival)
         queue: List[Job] = []
         results: List[JobResult] = []

@@ -34,6 +34,8 @@ class LegacySimulator(Simulator):
             raise NotImplementedError(
                 "LegacySimulator predates the serving bridge; "
                 "serving='batched' runs on the event-heap Simulator only")
+        # new run, new world (see Simulator.run): flush score caches
+        self.cluster._fail_gen += 1
         pending = sorted(jobs, key=lambda j: j.arrival)
         queue: List[Job] = []
         results: List[JobResult] = []

@@ -8,14 +8,27 @@ subject to the SLO when possible.  Decision-making happens at arrival
 (a preprocessing step — zero runtime scheduling overhead, paper §5.4);
 there is no adaptive re-scheduling and no per-engine configuration tuning —
 the two capabilities SynergAI adds.
+
+The arrival scoring is vectorized over the fleet: the engine's profiled
+(qps, preproc, decode_frac) row comes from the shared
+``estimator.engine_rows`` cache (one fancy index instead of W ConfigDict
+lookups) and the depth penalty / role gates read the ``Cluster``
+struct-of-arrays mirror, so a decision is a handful of O(W) vector ops.
+The winner is the first index minimizing expected latency among
+SLO-satisfying pools (falling back to all feasible pools) — exactly the
+original scan's ``(ok and not best_ok) or (ok == best_ok and score <
+best)`` tie-breaking, bit-for-bit.
 """
 
 from __future__ import annotations
 
-import math
 from typing import Dict, List
 
-from repro.core.simulator import Assignment, Cluster, Policy
+import numpy as np
+
+from repro.core.engines import engine_catalogue
+from repro.core.estimator import engine_rows
+from repro.core.simulator import PHASE_CODE, Assignment, Cluster, Policy
 
 
 class SloMael(Policy):
@@ -26,74 +39,74 @@ class SloMael(Policy):
         self.mapping: Dict[int, str] = {}        # job id -> worker
         self.worker_fifo: Dict[str, List[int]] = {}
 
-    @staticmethod
-    def _phase_exec(ent, job, phase: str):
-        """(exec_s, prefill_s) of the phase being placed, with the
-        worker's default configuration: the full service outside
-        disaggregated clusters, the prefill prefix or decode remainder of
-        it inside one."""
-        from repro.core.serving_bridge import prefill_prefix
-        full = ent.preproc_s + job.queries / ent.qps
-        prefill = prefill_prefix(ent, job.queries)
-        if phase == "prefill":
-            return prefill, prefill
-        if phase == "decode":
-            return full - prefill, 0.0
-        return full, prefill
-
     def on_arrival(self, job, cluster: Cluster, now: float):
-        best_w, best_score, best_ok = None, math.inf, False
-        t_rem = job.t_qos
-        req = job.request
+        a = cluster.arrays
+        names = a.names
+        qps, pre, frac = engine_rows(cluster.cd, job.engine, names,
+                                     use_default=True,
+                                     token=cluster.worker_token)
         phase = cluster.phase_of(job)
-        if req is not None and req.tpot_qos is not None:
-            # per-token rate over the engine-default token count: the
-            # profile-shape decode seconds and the sampled Request length
-            # would otherwise disagree on what "per token" means
-            from repro.core.engines import engine_catalogue
-            spec = engine_catalogue().get(job.engine)
-            dtok = (job.queries * spec.decode_len if spec is not None
-                    else req.decode_tokens)
-        for w, ws in cluster.workers.items():
-            if not cluster.role_ok(job, w):
-                continue    # disaggregated: wrong-phase pool
-            ent = cluster.cd.default_entry(job.engine, w)
-            if ent is None or ent.qps <= 0:
-                continue
-            # expected backlog from its *own* model-based bookkeeping (the
-            # preprocessing-time plan) — it does not re-observe the cluster,
-            # which is exactly the "no adaptive rescheduling" limitation the
-            # paper calls out.  Under the batched serving bridge the
-            # execution estimate is queue-depth-adjusted (joining a live
-            # batch runs 1 + alpha*b slower); 1.0 in job mode.
-            wait = max(0.0, self.backlog.get(w, 0.0) - now)
-            pen = cluster.depth_penalty(w, now)
-            exec_s, prefill_s = self._phase_exec(ent, job, phase)
+        q = float(job.queries)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            # full default-config service and its prefill prefix
+            # (``serving_bridge.prefill_prefix``, vectorized)
+            exec_q = q / qps
+            full = pre + exec_q
+            prefill = np.minimum(full, pre + exec_q * (1.0 - frac))
+            if phase == "prefill":
+                exec_s, prefill_s = prefill, prefill
+            elif phase == "decode":
+                exec_s, prefill_s = full - prefill, np.zeros(len(names))
+            else:
+                exec_s, prefill_s = full, prefill
+            cand = qps > 0
+            if cluster.disaggregated:
+                cand &= (a.role == 0) | (a.role == PHASE_CODE[phase])
+            if not cand.any():
+                return
+            # expected backlog from its *own* model-based bookkeeping
+            # (the preprocessing-time plan) — it does not re-observe the
+            # cluster, which is exactly the "no adaptive rescheduling"
+            # limitation the paper calls out.  Under the batched serving
+            # bridge the execution estimate is queue-depth-adjusted
+            # (joining a live batch runs 1 + alpha*b slower); 1 in job
+            # mode.
+            wait = np.maximum(0.0, np.fromiter(
+                (self.backlog.get(w, 0.0) for w in names),
+                dtype=np.float64, count=len(names)) - now)
+            pen = cluster.depth_penalty_array(now)
             exp_latency = wait + pen * exec_s
-            ok = exp_latency <= t_rem
+            ok = cand & (exp_latency <= job.t_qos)
             # streaming SLOs: the plan must clear every deadline the job
             # carries — the tighter of (latency, TTFT, TPOT) headroom
-            if req is not None and req.ttft_qos is not None \
-                    and phase != "decode":
+            req = job.request
+            if (req is not None and req.ttft_qos is not None
+                    and phase != "decode"):
                 exp_ttft = (now - job.arrival) + wait + pen * prefill_s
-                ok = ok and exp_ttft <= req.ttft_qos
+                ok &= exp_ttft <= req.ttft_qos
             if (req is not None and req.tpot_qos is not None
-                    and phase != "prefill" and dtok > 0):
-                decode_s = exec_s - (prefill_s if phase != "decode"
-                                     else 0.0)
-                ok = ok and pen * decode_s / dtok <= req.tpot_qos
-            # prefer SLO-satisfying mappings; break ties by expected latency
-            if (ok and not best_ok) or (
-                    ok == best_ok and exp_latency < best_score):
-                best_w, best_score, best_ok = w, exp_latency, ok
-        if best_w is None:
-            return
+                    and phase != "prefill"):
+                # per-token rate over the engine-default token count: the
+                # profile-shape decode seconds and the sampled Request
+                # length would otherwise disagree on what "per token" means
+                spec = engine_catalogue().get(job.engine)
+                dtok = (job.queries * spec.decode_len if spec is not None
+                        else req.decode_tokens)
+                if dtok > 0:
+                    decode_s = exec_s - (prefill_s if phase != "decode"
+                                         else 0.0)
+                    ok &= pen * decode_s / dtok <= req.tpot_qos
+        # prefer SLO-satisfying mappings; break ties by expected latency
+        # at the lowest index — argmin over the masked scores reproduces
+        # the original first-strict-improvement scan exactly
+        pick = ok if ok.any() else cand
+        scores = np.where(pick, exp_latency, np.inf)
+        wi = int(scores.argmin())
+        best_w = names[wi]
         self.mapping[job.id] = best_w
-        ent = cluster.cd.default_entry(job.engine, best_w)
-        exec_s, _ = self._phase_exec(ent, job, phase)
         base = max(cluster.workers[best_w].busy_until,
                    self.backlog.get(best_w, now), now)
-        self.backlog[best_w] = base + exec_s
+        self.backlog[best_w] = base + float(exec_s[wi])
         self.worker_fifo.setdefault(best_w, []).append(job.id)
 
     def schedule(self, now, queue, cluster) -> List[Assignment]:

@@ -1,4 +1,4 @@
-"""SynergAI Eq. 2-4 scoring Pallas TPU kernel.
+"""SynergAI Eq. 2-4 scoring Pallas TPU kernels (v1 + fused v2).
 
 At fleet scale (thousands of queued jobs x hundreds of worker pools) the
 scheduler's scoring step is itself a dense [J, W] compute:
@@ -11,7 +11,19 @@ scheduler's scoring step is itself a dense [J, W] compute:
 Grid walks J-blocks with the full worker axis resident in VMEM; infeasible
 (j, w) pairs carry qps <= 0 and are excluded via masking.  Validated against
 ``repro.core.estimator.estimate_matrix`` (the numpy oracle) in the tests.
-"""
+
+``scheduler_score_v2`` fuses the whole batched-serving scoring pipeline —
+the queue-depth penalty (``1 + alpha * b`` per worker), the
+prefill/decode phase slicing of disaggregated pools, and the TTFT/TPOT
+streaming-deadline gates — into a single pass, so the Pallas path covers
+``serving="batched"`` + streaming scoring end-to-end instead of falling
+back to numpy post-processing.  It consumes the *precomputed* solo
+matrices (full service, prefill prefix, decode remainder, ``inf`` marking
+infeasible pairs — exactly what ``repro.core.scorecache`` persists across
+ticks) and emits the effective times, the gated acceptability, the
+TTFT-tightened urgency, and doom.  The numpy oracle is the batched +
+streaming block of ``repro.core.scheduler.SynergAI``; parity, including
+the padding edges, is pinned in ``tests/test_pallas_parity.py``."""
 
 from __future__ import annotations
 
@@ -91,3 +103,97 @@ def scheduler_score(qps, preproc, queries, t_remaining, *, bj=128,
     est, best, urg, acc = out
     n = J - pad
     return est[:n], best[:n], urg[:n], acc[:n]
+
+
+def _score_v2_kernel(t_ref, pre_ref, dec_ref, rem_ref, pen_ref, phase_ref,
+                     hft_ref, hpt_ref, trem_ref, tq_ref, dtok_ref,
+                     est_ref, acc_ref, urg_ref, doom_ref):
+    t = t_ref[...]                      # [BJ, W] solo full service (inf=infeasible)
+    pre = pre_ref[...]                  # [BJ, W] prefill prefix
+    dec = dec_ref[...]                  # [BJ, W] decode remainder
+    rem = rem_ref[...]                  # [BJ, 1] Eq. 1 remaining budget
+    pen = pen_ref[...]                  # [1, W] queue-depth penalty
+    phase = phase_ref[...]              # [BJ, 1] 0 full / 1 prefill / 2 decode
+    has_ttft = hft_ref[...] != 0        # [BJ, 1]
+    has_tpot = hpt_ref[...] != 0
+    ttft_rem = trem_ref[...]            # [BJ, 1] TTFT budget minus waiting
+    tpot_qos = tq_ref[...]              # [BJ, 1] (inf = no deadline)
+    dtok = dtok_ref[...]                # [BJ, 1] decoded tokens (inf = n/a)
+
+    # phase-sliced, depth-penalized effective service time
+    t_eff = jnp.where(phase == 1, pre, jnp.where(phase == 2, dec, t))
+    t_eff = t_eff * pen
+    acc = rem >= t_eff                                        # Eq. 3
+    # streaming gates on the penalized phase split: a decode-phase job's
+    # TTFT is history, a prefill-phase job's TPOT belongs to its decode
+    ttft_est = pre * pen
+    tpot_est = dec * pen / dtok
+    acc &= (~has_ttft) | (phase == 2) | (ttft_est <= ttft_rem)
+    acc &= (~has_tpot) | (phase == 1) | (tpot_est <= tpot_qos)
+    # urgency decays from the *solo* estimate (matching the numpy path);
+    # a scarce TTFT budget can become the binding urgency
+    urg = rem[:, 0] - jnp.min(t, axis=1)
+    ttft_slack = ttft_rem[:, 0] - jnp.min(ttft_est, axis=1)
+    urg = jnp.where(has_ttft[:, 0] & (phase[:, 0] != 2),
+                    jnp.minimum(urg, ttft_slack), urg)
+    doom = ~jnp.any(acc, axis=1)
+
+    est_ref[...] = t_eff
+    acc_ref[...] = acc.astype(jnp.int8)
+    urg_ref[...] = urg
+    doom_ref[...] = doom.astype(jnp.int8)
+
+
+def scheduler_score_v2(t_solo, prefill, decode, t_remaining, pen, phase,
+                       has_ttft, has_tpot, ttft_rem, tpot_qos, dtok, *,
+                       bj=128, interpret=False):
+    """Fused batched + streaming + disaggregated scoring.
+
+    t_solo, prefill, decode: [J, W] f32 solo-service matrices (``inf``
+    marks infeasible pairs); pen: [W] f32 depth penalty; t_remaining,
+    ttft_rem, tpot_qos, dtok: [J] f32; phase: [J] int (0/1/2); has_ttft,
+    has_tpot: [J] int (0/1).  Returns (t_eff [J,W], acceptable [J,W]
+    int8, urgency [J], doomed [J] int8)."""
+    J, W = t_solo.shape
+    bj = min(bj, J)
+    pad = (-J) % bj
+    if pad:
+        z = lambda a, fill: jnp.pad(a, [(0, pad)] + [(0, 0)] *
+                                    (a.ndim - 1), constant_values=fill)
+        inf = jnp.inf
+        t_solo, prefill, decode = (z(t_solo, inf), z(prefill, inf),
+                                   z(decode, inf))
+        t_remaining, ttft_rem = z(t_remaining, -1.0), z(ttft_rem, -1.0)
+        tpot_qos, dtok = z(tpot_qos, 1.0), z(dtok, 1.0)
+        phase, has_ttft, has_tpot = (z(phase, 0), z(has_ttft, 0),
+                                     z(has_tpot, 0))
+        J = J + pad
+    col = lambda a, dt: a.astype(dt)[:, None]
+    jw = pl.BlockSpec((bj, W), lambda i: (i, 0))
+    j1 = pl.BlockSpec((bj, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _score_v2_kernel,
+        grid=(J // bj,),
+        in_specs=[jw, jw, jw, j1,
+                  pl.BlockSpec((1, W), lambda i: (0, 0)),   # pen: resident
+                  j1, j1, j1, j1, j1, j1],
+        out_specs=[jw,
+                   jw,
+                   pl.BlockSpec((bj,), lambda i: (i,)),
+                   pl.BlockSpec((bj,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((J, W), jnp.float32),
+            jax.ShapeDtypeStruct((J, W), jnp.int8),
+            jax.ShapeDtypeStruct((J,), jnp.float32),
+            jax.ShapeDtypeStruct((J,), jnp.int8),
+        ],
+        interpret=interpret,
+    )(t_solo.astype(jnp.float32), prefill.astype(jnp.float32),
+      decode.astype(jnp.float32), col(t_remaining, jnp.float32),
+      pen.astype(jnp.float32)[None, :], col(phase, jnp.int32),
+      col(has_ttft, jnp.int32), col(has_tpot, jnp.int32),
+      col(ttft_rem, jnp.float32), col(tpot_qos, jnp.float32),
+      col(dtok, jnp.float32))
+    est, acc, urg, doom = out
+    n = J - pad
+    return est[:n], acc[:n], urg[:n], doom[:n]

@@ -1,7 +1,13 @@
 """Pallas ``scheduler_score`` vs the numpy ``estimate_matrix`` oracle at
 fleet scale (J~2048, W=256), covering the padding edges (J not divisible by
 ``bj``, all-infeasible rows, doomed jobs) — and the drop-in guarantee:
-``SynergAI(score_fn=pallas)`` produces identical assignments."""
+``SynergAI(score_fn=pallas)`` produces identical assignments.
+
+The fused v2 kernel (``scheduler_score_v2``) is additionally checked
+against the numpy batched + streaming + disaggregated scoring block
+(depth penalty, phase slicing, TTFT/TPOT gates — interpret mode, padding
+edges included), and ``SynergAI(score_fn=make_pallas_score_fn(v2=True))``
+must be a drop-in under ``serving="batched"``."""
 
 import numpy as np
 import pytest
@@ -79,3 +85,115 @@ def test_synergai_identical_assignments_with_pallas_score_fn(configdict):
                     utilization=0.9, seed=5)
     assert run(None, jobs, fleet=fleet, seed=5) \
         == run(make_pallas_score_fn(), jobs, fleet=fleet, seed=5)
+
+
+# ----------------------------------------------------------------------------
+# fused v2 kernel: batched + streaming + disaggregated scoring
+
+
+def _v2_inputs(configdict, J, seed):
+    """A messy fused-scoring input set: fleet-scale matrices with
+    infeasible columns and all-infeasible rows, mixed phases, live depth
+    penalties, and streaming deadlines on a slice of the queue."""
+    from repro.core.estimator import phase_split_matrices, score_matrices
+
+    rng = np.random.default_rng(seed)
+    fleet = synth_fleet(86, 85, 85)
+    workers = [w.name for w in fleet]
+    jobs = _fleet_queue(configdict, J)[:J]
+    now = float(np.median([j.arrival for j in jobs]))
+    qps, pre = score_matrices(configdict, jobs, workers)
+    q = np.array([float(j.queries) for j in jobs])
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t0 = np.where(qps > 0, pre + q[:, None] / qps, np.inf)
+    pre_m, dec_m = phase_split_matrices(configdict, jobs, workers)
+    t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])
+    pen = np.where(rng.random(len(workers)) < 0.5,
+                   1.0 + 0.5 * rng.integers(1, 8, len(workers)), 1.0)
+    phase = rng.integers(0, 3, J).astype(np.int8)
+    has_ttft = rng.random(J) < 0.4
+    has_tpot = rng.random(J) < 0.4
+    ttft_qos = np.where(has_ttft, rng.uniform(0.5, 50.0, J), np.inf)
+    tpot_qos = np.where(has_tpot, rng.uniform(1e-5, 1e-2, J), np.inf)
+    dtok = rng.integers(100, 200_000, J).astype(np.float64)
+    ttft_rem = ttft_qos - rng.uniform(0.0, 5.0, J)
+    return (t0, pre_m, dec_m, t_rem, pen, phase, has_ttft, has_tpot,
+            ttft_rem, tpot_qos, dtok)
+
+
+def _v2_numpy_oracle(t0, pre_m, dec_m, t_rem, pen, phase, has_ttft,
+                     has_tpot, ttft_rem, tpot_qos, dtok):
+    """The exact numpy scoring block from ``SynergAI``: phase slicing,
+    depth penalty, Eq. 3 + streaming gates, TTFT-tightened urgency."""
+    t = np.where((phase == 1)[:, None], pre_m,
+                 np.where((phase == 2)[:, None], dec_m, t0))
+    t = t * pen[None, :]
+    acceptable = t_rem[:, None] >= t
+    ttft_est = pre_m * pen[None, :]
+    tpot_est = dec_m * pen[None, :] / dtok[:, None]
+    ok_ttft = ((~has_ttft | (phase == 2))[:, None]
+               | (ttft_est <= ttft_rem[:, None]))
+    ok_tpot = ((~has_tpot | (phase == 1))[:, None]
+               | (tpot_est <= tpot_qos[:, None]))
+    acceptable = acceptable & ok_ttft & ok_tpot
+    urgency = t_rem - t0.min(axis=1)
+    with np.errstate(invalid="ignore"):
+        ttft_slack = ttft_rem - np.min(ttft_est, axis=1)
+    urgency = np.where(has_ttft & (phase != 2),
+                       np.minimum(urgency, ttft_slack), urgency)
+    return t, acceptable, urgency, ~acceptable.any(axis=1)
+
+
+@pytest.mark.parametrize("J,bj", [(1024, 128), (1021, 128)])
+def test_v2_kernel_matches_numpy_oracle(configdict, J, bj):
+    inputs = _v2_inputs(configdict, J, seed=17)
+    t, acc, urg, doom = _v2_numpy_oracle(*inputs)
+    fn = make_pallas_score_fn(bj=bj, v2=True)
+    t2, acc2, urg2, doom2 = fn(*inputs)
+    feas = np.isfinite(t)
+    assert (np.isfinite(t2) == feas).all()
+    np.testing.assert_allclose(t2[feas], t[feas], rtol=1e-5)
+    # float32 scoring may flip entries whose estimate ties the deadline
+    # to the last few bits; everything with real margin must agree
+    t_rem = inputs[3]
+    margin = np.abs(t - t_rem[:, None])
+    tol = 1e-4 * np.maximum(np.abs(t), np.abs(t_rem)[:, None]) + 1e-6
+    clear = feas & (margin > tol)
+    assert (acc2 == acc)[clear].all()
+    mism = (acc2 != acc) & ~clear
+    assert mism.mean() < 0.01                      # ties are rare
+    same_doom = (acc2.any(axis=1) == acc.any(axis=1))
+    assert same_doom.mean() > 0.99
+    assert (doom2 == ~acc2.any(axis=1)).all()      # self-consistent
+    assert (doom2 == doom)[same_doom].all()
+    row_ok = feas.any(axis=1)
+    np.testing.assert_allclose(urg2[row_ok], urg[row_ok], rtol=1e-4,
+                               atol=0.5)
+    # the messy inputs really exercised the edges
+    assert (~feas).any(axis=1).any() and (~feas).all(axis=1).any()
+    assert doom.any() and not doom.all()
+    assert (inputs[4] != 1.0).any()                # live depth penalties
+
+
+def test_synergai_v2_drop_in(configdict):
+    """``SynergAI(score_fn=make_pallas_score_fn(v2=True))`` is a drop-in:
+    byte-identical schedules under serving='batched' with streaming
+    deadlines and disaggregated pools — and in plain job mode."""
+    def run(score_fn, jobs, **kw):
+        sim = Simulator(configdict, SynergAI(score_fn=score_fn), **kw)
+        return [(r.job.id, r.worker, r.config, r.start, r.end,
+                 r.violated, r.ttft, r.tpot) for r in sim.run(jobs)]
+
+    fleet = synth_fleet(2, 3, 3, disaggregate=True)
+    jobs = scenario(configdict, "mmpp", n_jobs=120, fleet=fleet, seed=3,
+                    utilization=1.0, serving="batched",
+                    streaming=(2.0, 2.5))
+    kw = dict(fleet=fleet, seed=3, serving="batched")
+    assert run(None, jobs, **kw) \
+        == run(make_pallas_score_fn(v2=True), jobs, **kw)
+
+    fleet = synth_fleet(2, 3, 3)
+    jobs = scenario(configdict, "mmpp", n_jobs=120, fleet=fleet,
+                    utilization=0.9, seed=5)
+    assert run(None, jobs, fleet=fleet, seed=5) \
+        == run(make_pallas_score_fn(v2=True), jobs, fleet=fleet, seed=5)

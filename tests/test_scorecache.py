@@ -1,0 +1,257 @@
+"""Incremental scheduler core: score-cache invalidation + equivalence.
+
+Covers the PR's acceptance anchors: the cross-tick ``ScoreCache`` keeps
+``SynergAI`` bit-for-bit identical to the uncached full-matrix path
+(deterministic runs + a hypothesis property behind the conftest shim
+with seeded fallbacks, both serving modes), elastic clone arrivals
+*extend* the cached columns instead of flushing, failures bump the
+fleet generation and flush, a first-sighted engine extends the
+``_EngineTable`` rows mid-run, and the ``Cluster`` struct-of-arrays
+mirror agrees with the per-worker scalar state at every tick."""
+
+import functools
+
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro.core.estimator import estimate_matrix
+from repro.core.job import Job, make_experiment
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.scorecache import ScoreCache
+from repro.core.simulator import (BatchedWorkerSim, FailureEvent,
+                                  Simulator)
+from repro.core.workers import synth_fleet
+from repro.core.workload import scenario
+
+
+@functools.lru_cache(maxsize=None)
+def _cd():
+    # session-style cache that doesn't tangle pytest fixtures with @given
+    return characterize()
+
+
+def _result_key(results):
+    return [(r.job.id, r.worker, r.config, r.start, r.end, r.waiting,
+             r.exec_s, r.e2e, r.violated, r.excess, r.ttft, r.tpot)
+            for r in results]
+
+
+def _run(cd, policy, jobs, **kw):
+    return _result_key(Simulator(cd, policy, **kw).run(jobs))
+
+
+# ----------------------------------------------------------------------------
+# cached == uncached, deterministically
+
+def _check_cached_equals_uncached(seed, kind, utilization, serving,
+                                  streaming=None, disaggregate=False,
+                                  failures=False, elastic=0):
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2, disaggregate=disaggregate)
+    jobs = scenario(cd, kind, n_jobs=120, fleet=fleet, seed=seed,
+                    utilization=utilization, serving=serving,
+                    streaming=streaming)
+    kw = dict(fleet=fleet, seed=seed, serving=serving)
+    if failures:
+        span = jobs[-1].arrival
+        from repro.core.workload import synth_failures
+        kw["failures"] = synth_failures(fleet, span, mtbf_s=span / 2,
+                                        mttr_s=60.0, seed=seed)
+    if elastic:
+        kw.update(elastic_max=elastic, elastic_threshold=4)
+    a = _run(cd, SynergAI(), jobs, **kw)
+    b = _run(cd, SynergAI(incremental=False), jobs, **kw)
+    assert a == b
+
+
+@pytest.mark.parametrize("seed,kind,serving,streaming,disagg", [
+    (1, "mmpp", "job", None, False),
+    (2, "poisson", "batched", None, False),
+    (3, "mmpp", "batched", (2.0, 2.5), False),
+    (4, "multi-tenant", "batched", (1.5, 2.0), True),
+    (5, "drift", "job", None, False),
+])
+def test_cached_equals_uncached_seeded(seed, kind, serving, streaming,
+                                       disagg):
+    _check_cached_equals_uncached(seed, kind, 1.1, serving,
+                                  streaming=streaming,
+                                  disaggregate=disagg)
+
+
+def test_cached_equals_uncached_under_failures_and_elastic():
+    _check_cached_equals_uncached(7, "mmpp", 1.3, "job", failures=True)
+    _check_cached_equals_uncached(8, "flash", 1.3, "job", elastic=2)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "mmpp", "flash", "multi-tenant"]),
+       utilization=st.floats(0.6, 1.5),
+       serving=st.sampled_from(["job", "batched"]))
+def test_cached_equals_uncached_property(seed, kind, utilization, serving):
+    """Cached and uncached SynergAI produce identical assignment streams
+    under random workloads in both serving modes."""
+    _check_cached_equals_uncached(seed, kind, utilization, serving)
+
+
+# ----------------------------------------------------------------------------
+# invalidation: elastic columns, failure generations, drift engines
+
+def _sim_cluster(cd, serving="job", fleet=None):
+    sim = Simulator(cd, SynergAI(), fleet=fleet, serving=serving)
+    return sim, sim.cluster
+
+
+def test_elastic_clone_extends_columns(configdict):
+    """Appending a pool (elastic provisioning) extends the cached rows by
+    the new columns — no flush, and the widened rows match a fresh
+    uncached score of the same queue."""
+    import dataclasses
+
+    cd = configdict
+    fleet = synth_fleet(1, 2, 2)
+    sim, cluster = _sim_cluster(cd, fleet=fleet)
+    jobs = make_experiment(cd, "DL", "FH", seed=3)
+    cache = ScoreCache()
+    slots = cache.sync(cd, jobs, cluster)
+    assert cache.flushes == 0 and cache.col_extends == 0
+    w0 = cache._W
+    base = cluster.workers["cloud-pod"].pool
+    clone = dataclasses.replace(base, name="cloud-pod__clone1")
+    cluster.workers[clone.name] = cluster._make_worker(clone)
+    gen_before = cluster.fleet_gen
+    slots2 = cache.sync(cd, jobs, cluster)
+    assert cluster.fleet_gen == gen_before          # sync reads, no bump
+    assert cache.col_extends == 1 and cache.flushes == 0
+    assert cache._W == w0 + 1
+    names = cluster.arrays.names
+    ref = estimate_matrix(cd, jobs, names, now=0.0)
+    np.testing.assert_array_equal(cache.t_matrix(slots2),
+                                  ref.t_estimated)
+    np.testing.assert_array_equal(cache.min_estimate(slots2),
+                                  ref.t_estimated.min(axis=1))
+    # retiring a pool is a non-append membership change -> flush
+    del cluster.workers[clone.name]
+    cache.sync(cd, jobs, cluster)
+    assert cache.flushes == 1
+
+
+def test_failure_bumps_fleet_gen_and_flushes(configdict):
+    cd = configdict
+    _, cluster = _sim_cluster(cd)
+    jobs = make_experiment(cd, "DL", "FL", seed=1)
+    cache = ScoreCache()
+    cache.sync(cd, jobs, cluster)
+    gen = cluster.fleet_gen
+    # the failure-injection write (what Simulator.run does on a
+    # FailureEvent) bumps the failure generation...
+    cluster.workers["edge-large"].failed_until = 50.0
+    assert cluster.fleet_gen == gen + 1
+    assert cluster.fail_gen >= 1
+    # ...which invalidates the cache wholesale on the next tick
+    cache.sync(cd, jobs, cluster)
+    assert cache.flushes == 1
+    # rows are rebuilt and still exact
+    slots = cache.sync(cd, jobs, cluster)
+    ref = estimate_matrix(cd, jobs, cluster.arrays.names, now=0.0)
+    np.testing.assert_array_equal(cache.t_matrix(slots), ref.t_estimated)
+
+
+def test_first_sighted_engine_extends_table_rows():
+    """A drift trace can surface an engine mid-run; its rows extend the
+    shared ``_EngineTable`` and the cache on first sighting."""
+    from repro.core.estimator import _table
+
+    cd = characterize()     # fresh ConfigDict: an untouched row cache
+    _, cluster = _sim_cluster(cd)
+    jobs = [Job(i, "gemma-2b/bf16", 1000, 500.0, float(i))
+            for i in range(6)]
+    cache = ScoreCache()
+    cache.sync(cd, jobs, cluster)
+    tab = _table(cd, cluster.arrays.names, False,
+                 token=cluster.worker_token)
+    n0 = len(tab.index)
+    assert "qwen3-32b/bf16" not in tab.index
+    late = Job(99, "qwen3-32b/bf16", 800, 500.0, 6.0)
+    slots = cache.sync(cd, jobs + [late], cluster)
+    assert len(tab.index) == n0 + 1 and "qwen3-32b/bf16" in tab.index
+    ref = estimate_matrix(cd, jobs + [late], cluster.arrays.names,
+                          now=0.0)
+    np.testing.assert_array_equal(cache.t_matrix(slots), ref.t_estimated)
+
+
+def test_requeued_job_reuses_warm_row(configdict):
+    """Slots are reclaimed lazily: a job that leaves the queue (placed)
+    and comes back (failure requeue) finds its row slot intact."""
+    cd = configdict
+    _, cluster = _sim_cluster(cd)
+    jobs = make_experiment(cd, "DL", "FL", seed=2)
+    cache = ScoreCache()
+    cache.sync(cd, jobs, cluster)
+    computed = cache.rows_computed
+    slot_of_first = cache._slot[jobs[0].id]
+    # job 0 departs for a tick, then returns
+    cache.sync(cd, jobs[1:], cluster)
+    slots = cache.sync(cd, jobs, cluster)
+    assert cache.rows_computed == computed       # no recompute
+    assert cache._slot[jobs[0].id] == slot_of_first
+    ref = estimate_matrix(cd, jobs, cluster.arrays.names, now=0.0)
+    np.testing.assert_array_equal(cache.t_matrix(slots), ref.t_estimated)
+
+
+# ----------------------------------------------------------------------------
+# struct-of-arrays mirror: vector views == scalar predicates, every tick
+
+class _ProbingSynergAI(SynergAI):
+    """Asserts the Cluster struct-of-arrays mirror against the scalar
+    worker state (and the vector masks against the scalar predicates)
+    on every scheduling tick, then schedules normally."""
+
+    def schedule(self, now, queue, cluster):
+        a = cluster.arrays
+        avail = cluster.avail_array(now)
+        busy_wait = cluster.busy_wait_array(now)
+        pen = cluster.depth_penalty_array(now)
+        for i, (name, ws) in enumerate(cluster.workers.items()):
+            assert a.names[i] == name
+            assert a.busy_until[i] == ws.busy_until
+            assert a.failed_until[i] == ws.failed_until
+            assert bool(avail[i]) == ws.idle(now)
+            assert busy_wait[i] == max(0.0, ws.busy_until - now,
+                                       ws.failed_until - now)
+            assert pen[i] == cluster.depth_penalty(name, now)
+            if isinstance(ws, BatchedWorkerSim):
+                assert a.depth[i] == len(ws.active)
+        for eng in {j.engine for j in queue}:
+            for ph in ("full", "prefill", "decode"):
+                m = cluster.admit_engine_mask(eng, now, ph)
+                for i, name in enumerate(a.names):
+                    assert bool(m[i]) == cluster.admit_engine_ok(
+                        eng, name, now, phase=ph), (eng, ph, name)
+        return super().schedule(now, queue, cluster)
+
+
+@pytest.mark.parametrize("serving,disagg", [("job", False),
+                                            ("batched", False),
+                                            ("batched", True)])
+def test_soa_mirror_consistent_through_run(configdict, serving, disagg):
+    fleet = synth_fleet(1, 2, 2, disaggregate=disagg)
+    jobs = scenario(configdict, "mmpp", n_jobs=80, fleet=fleet, seed=6,
+                    utilization=1.1, serving=serving)
+    failures = [FailureEvent("edge-large", at=20.0, duration=30.0)]
+    res = Simulator(configdict, _ProbingSynergAI(), fleet=fleet, seed=6,
+                    serving=serving, failures=failures).run(jobs)
+    assert len(res) == len(jobs)
+
+
+def test_soa_mirror_tracks_elastic_membership(configdict):
+    jobs = scenario(configdict, "flash", n_jobs=120, seed=9,
+                    utilization=1.5)
+    sim = Simulator(configdict, _ProbingSynergAI(), seed=9,
+                    elastic_max=2, elastic_threshold=4)
+    res = sim.run(jobs)
+    assert len(res) == len(jobs)
+    # clones retired once pressure subsided -> mirror followed the dict
+    assert len(sim.cluster.arrays.names) == len(sim.cluster.workers)

@@ -1,0 +1,100 @@
+"""Gate scheduler-decision perf against the committed baseline.
+
+Compares a fresh ``bench_sched_overhead`` JSON (written by
+``benchmarks/scheduler_experiments.py --sched-json``) against the
+committed ``BENCH_SCHED.json`` baseline and fails (exit 1) if per-tick
+decision time regressed by more than ``--threshold`` (default 30%).
+
+CI runners differ wildly in absolute speed, so the default gate compares
+the *hardware-independent* ``speedup_vs_uncached`` ratios: both sides of
+that ratio are measured in the same process on the same machine, so a
+drop means the incremental path itself got slower relative to the
+full-matrix rebuild — a real regression, not runner noise.  Pass
+``--absolute`` to additionally gate the raw ``mean_tick_ms`` numbers
+(useful when baseline and fresh run on pinned identical hardware).
+
+The headline floor (cached >= 5x uncached at the 10k-job x 64-pool
+backlog, the PR acceptance bar) is always enforced when the fresh run
+contains that config.
+
+Usage:  python tools/check_perf_regression.py BENCH_SCHED.json fresh.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+HEADLINE_FLOOR = 5.0        # cached vs uncached at J=10k, W=64
+
+
+def _index(blob):
+    return {(c["variant"], c["J"], c["W"], c.get("serving", "job")): c
+            for c in blob.get("configs", [])}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("baseline", help="committed BENCH_SCHED.json")
+    p.add_argument("fresh", help="freshly measured bench JSON")
+    p.add_argument("--threshold", type=float, default=0.30,
+                   help="allowed relative regression (default 0.30)")
+    p.add_argument("--absolute", action="store_true",
+                   help="also gate raw mean_tick_ms (pinned hardware)")
+    args = p.parse_args(argv)
+    with open(args.baseline) as f:
+        base = _index(json.load(f))
+    with open(args.fresh) as f:
+        fresh_blob = json.load(f)
+    fresh = _index(fresh_blob)
+
+    failures = []
+    for key, fc in fresh.items():
+        bc = base.get(key)
+        if bc is None:
+            print(f"note {key}: no baseline entry, skipping")
+            continue
+        b_speed = bc.get("speedup_vs_uncached")
+        f_speed = fc.get("speedup_vs_uncached")
+        if b_speed and f_speed:
+            ratio = f_speed / b_speed
+            tag = "ok  " if ratio >= 1.0 - args.threshold else "FAIL"
+            print(f"{tag} {key}: speedup {b_speed:.2f}x -> "
+                  f"{f_speed:.2f}x ({ratio:.2f} of baseline)")
+            if ratio < 1.0 - args.threshold:
+                failures.append(
+                    f"{key}: speedup_vs_uncached regressed to "
+                    f"{ratio:.2f} of baseline (threshold "
+                    f"{1.0 - args.threshold:.2f})")
+        if args.absolute:
+            ratio = fc["mean_tick_ms"] / bc["mean_tick_ms"]
+            tag = "ok  " if ratio <= 1.0 + args.threshold else "FAIL"
+            print(f"{tag} {key}: mean_tick_ms {bc['mean_tick_ms']:.2f} "
+                  f"-> {fc['mean_tick_ms']:.2f} ({ratio:.2f}x)")
+            if ratio > 1.0 + args.threshold:
+                failures.append(
+                    f"{key}: mean_tick_ms regressed {ratio:.2f}x "
+                    f"(threshold {1.0 + args.threshold:.2f}x)")
+    head = fresh_blob.get("headline")
+    if head:
+        speed = head.get("speedup_cached_vs_uncached", 0.0)
+        tag = "ok  " if speed >= HEADLINE_FLOOR else "FAIL"
+        print(f"{tag} headline J={head.get('J')} W={head.get('W')}: "
+              f"cached {speed:.2f}x uncached "
+              f"(floor {HEADLINE_FLOOR:.0f}x)")
+        if speed < HEADLINE_FLOOR:
+            failures.append(
+                f"headline cached-vs-uncached speedup {speed:.2f}x "
+                f"below the {HEADLINE_FLOOR:.0f}x acceptance floor")
+    if failures:
+        print("\nperf regression gate FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print("perf regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
