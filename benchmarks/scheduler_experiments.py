@@ -388,6 +388,111 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
     return blob
 
 
+def bench_regions(cd=None, pools=(256, 896, 896), regions_sweep=(8, 16, 32),
+                  J=4096, iters=12, churn=256, tick=1.0, utilization=0.8,
+                  smoke=False, emit=print):
+    """Flat vs hierarchical per-tick decision time at fleet scale.
+
+    The same standing-backlog churn loop as ``bench_sched_overhead``
+    (free ``churn`` workers, time one ``schedule`` call, apply, inject
+    arrivals), run over a region-tagged fleet at each region count in
+    ``regions_sweep``: ``flat`` is the incremental ``SynergAI`` scoring
+    all W pools every tick, ``hier`` is ``HierarchicalSynergAI`` routing
+    in O(k) and scoring only region slices.  Region tags are inert to
+    the flat policy, so both variants face the identical workload.
+    ``speedup_hier_vs_flat`` is hardware-independent (both sides
+    measured in-process) and is what the nightly perf gate watches
+    (``tools/check_perf_regression.py``, 4x floor at the headline
+    config).  ``smoke=True`` shrinks everything to a seconds-long CI
+    sanity leg (the ratio is meaningless at that size — the smoke leg
+    only proves the bench runs)."""
+    import numpy as np
+
+    from repro.core.hierarchy import HierarchicalSynergAI
+    from repro.core.job import exec_time
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario
+
+    cd = cd or characterize()
+    if smoke:
+        pools, regions_sweep = (8, 28, 28), (4,)
+        J, iters, churn = 500, 4, 32
+    variants = [("flat", lambda: SynergAI()),
+                ("hier", lambda: HierarchicalSynergAI())]
+    results = []
+    for k in regions_sweep:
+        fleet = synth_fleet(*pools, regions=k)
+        W = len(fleet)
+        base = {}
+        for name, mk in variants:
+            jobs = scenario(cd, "mmpp", n_jobs=J + iters * churn,
+                            fleet=fleet, utilization=utilization, seed=0)
+            queue = list(jobs[:J])
+            reservoir = jobs[J:]
+            now = queue[-1].arrival
+            pol = mk()
+            sim = Simulator(cd, pol, fleet=fleet, seed=0)
+            cl = sim.cluster
+            rng = np.random.default_rng(0)
+            names = cl.arrays.names
+            for j in queue:
+                pol.on_arrival(j, cl, now)      # the simulator's hook
+            pol.schedule(now, queue, cl)        # warm caches / tables
+            ticks, placed_total = [], 0
+            for i in range(iters):
+                now += tick
+                for wi in rng.choice(W, size=min(churn, W),
+                                     replace=False):
+                    cl.workers[names[wi]].busy_until = now
+                t0 = time.perf_counter()
+                asg = pol.schedule(now, queue, cl)
+                ticks.append(time.perf_counter() - t0)
+                placed = set()
+                for a in asg:
+                    cl.workers[a.worker].busy_until = (
+                        now + a.xfer_s
+                        + exec_time(a.entry, a.job.queries))
+                    placed.add(a.job.id)
+                placed_total += len(placed)
+                queue = [j for j in queue if j.id not in placed]
+                fresh = reservoir[i * churn:(i + 1) * churn]
+                for j in fresh:
+                    j.arrival = now
+                    pol.on_arrival(j, cl, now)
+                queue.extend(fresh)
+            mean_ms = 1e3 * float(np.mean(ticks))
+            p50_ms = 1e3 * float(np.median(ticks))
+            rec = {"variant": name, "J": J, "W": W, "serving": "job",
+                   "regions": k, "iters": iters, "churn": churn,
+                   "mean_tick_ms": mean_ms, "p50_tick_ms": p50_ms,
+                   "placed_per_tick": placed_total / iters}
+            if name == "flat":
+                base[(J, W, k)] = mean_ms
+            else:
+                rec["speedup_hier_vs_flat"] = base[(J, W, k)] / mean_ms
+                rec["spills"] = pol.spills
+            results.append(rec)
+            emit(f"regions,{name},J={J},W={W},k={k},"
+                 f"mean_tick_ms={mean_ms:.2f},p50_tick_ms={p50_ms:.2f},"
+                 f"speedup_hier_vs_flat="
+                 f"{rec.get('speedup_hier_vs_flat', 1.0):.2f}x")
+    blob = {"schema": 1, "bench": "bench_regions", "configs": results}
+    if not smoke:
+        head = [r for r in results if r["variant"] == "hier"
+                and r["regions"] >= 16] or \
+               [r for r in results if r["variant"] == "hier"]
+        if head:
+            h = head[0]
+            blob["regions_headline"] = {
+                "J": h["J"], "W": h["W"], "regions": h["regions"],
+                "hier_mean_tick_ms": h["mean_tick_ms"],
+                "speedup_hier_vs_flat": h["speedup_hier_vs_flat"]}
+            emit(f"regions_headline,J={h['J']},W={h['W']},"
+                 f"k={h['regions']},hier_vs_flat="
+                 f"{h['speedup_hier_vs_flat']:.2f}x,target=4x")
+    return blob
+
+
 def bench_traces(cd=None, n_jobs=1500, pools=(2, 5, 5), utilization=1.3,
                  n_regions=3, correlation=0.6, emit=print):
     """The trace-driven scenarios under every policy: a replayed mmpp
@@ -495,9 +600,16 @@ def main(argv=None):
                    help="extend bench_sched_overhead to the 50k-job x "
                         "256-pool sweep (numpy backends only)")
     p.add_argument("--sched-json", metavar="PATH", default=None,
-                   help="write the bench_sched_overhead results as JSON "
-                        "(the BENCH_SCHED.json schema; nightly CI gates "
-                        "it with tools/check_perf_regression.py)")
+                   help="write the bench_sched_overhead + bench_regions "
+                        "results as JSON (the BENCH_SCHED.json schema; "
+                        "nightly CI gates it with "
+                        "tools/check_perf_regression.py)")
+    p.add_argument("--skip-regions", action="store_true",
+                   help="skip the flat vs hierarchical region bench "
+                        "(bench_regions)")
+    p.add_argument("--regions-smoke", action="store_true",
+                   help="run bench_regions at smoke size only (seconds; "
+                        "the tier-1 CI sanity leg)")
     p.add_argument("--json", metavar="PATH", default=None,
                    help="dump the serving/streaming bench summaries as "
                         "JSON (CI artifact)")
@@ -510,17 +622,27 @@ def main(argv=None):
     if not args.skip_scoring:
         print("# scoring: numpy vs Pallas kernel")
         bench_scoring(cd)
+    sched = None
     if not args.skip_sched:
         print("# scheduler overhead: uncached vs score-cache vs Pallas")
         sizes = [(2_000, (8, 28, 28)), (10_000, (8, 28, 28))]
         if args.sched_big:
             sizes.append((50_000, (86, 85, 85)))
         sched = bench_sched_overhead(cd, sizes=tuple(sizes))
-        if args.sched_json:
-            import json
-            with open(args.sched_json, "w") as f:
-                json.dump(sched, f, indent=1)
-            print(f"# wrote {args.sched_json}")
+    if not args.skip_regions:
+        print("# region sharding: flat vs hierarchical scheduler")
+        reg = bench_regions(cd, smoke=args.regions_smoke)
+        if sched is None:
+            sched = reg
+        else:
+            sched["configs"].extend(reg["configs"])
+            if "regions_headline" in reg:
+                sched["regions_headline"] = reg["regions_headline"]
+    if args.sched_json and sched is not None:
+        import json
+        with open(args.sched_json, "w") as f:
+            json.dump(sched, f, indent=1)
+        print(f"# wrote {args.sched_json}")
     if not args.skip_serving:
         print("# serving bridge: job-level vs batched (mmpp overload)")
         blob["serving"] = bench_serving(cd)

@@ -94,3 +94,13 @@ CLOUD_MODES = [OperatingMode("full", 1.00, 16, 16 * 400.0)]
 V5P_FLOPS_BF16 = 459e12
 V5P_HBM_BW = 2765e9
 V5P_HBM_BYTES = 95 * 1024**3
+
+# Inter-region WAN link (hierarchical scheduling, repro/core/hierarchy.py):
+# cross-region placements ship the request input — and, for disaggregated
+# jobs whose decode leg lands in another region, the KV handoff — over a
+# metro/long-haul link that is an order of magnitude thinner and ~10x
+# higher-latency than the in-region disaggregation fabric
+# (serving_bridge.DISAGG_XFER_*).
+REGION_XFER_GBPS = 1e9         # bytes/s
+REGION_XFER_LAT_S = 0.05       # one-way inter-region latency
+TOKEN_BYTES = 4                # wire bytes per shipped prompt token id

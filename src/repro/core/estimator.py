@@ -66,17 +66,23 @@ class _EngineTable:
         self.pre = np.vstack([self.pre, p[None]])
         self.frac = np.vstack([self.frac, d[None]])
 
-    def gather(self, jobs: Sequence[Job]):
+    def _rows(self, jobs: Sequence[Job]) -> np.ndarray:
+        """[J] row indices into the [E, W] tables, profiling any engine
+        on first sighting (shared by ``gather`` and the region-sliced
+        views, which reuse these rows instead of re-profiling)."""
         idx = self.index
         try:
-            rows = np.fromiter((idx[j.engine] for j in jobs),
+            return np.fromiter((idx[j.engine] for j in jobs),
                                dtype=np.intp, count=len(jobs))
         except KeyError:     # first sighting of an engine: profile it
             for job in jobs:
                 if job.engine not in idx:
                     self._add(job.engine)
-            rows = np.fromiter((idx[j.engine] for j in jobs),
+            return np.fromiter((idx[j.engine] for j in jobs),
                                dtype=np.intp, count=len(jobs))
+
+    def gather(self, jobs: Sequence[Job]):
+        rows = self._rows(jobs)
         return self.qps[rows], self.pre[rows], self.frac[rows]
 
     def row(self, engine: str):
@@ -88,6 +94,34 @@ class _EngineTable:
             self._add(engine)
             i = self.index[engine]
         return self.qps[i], self.pre[i], self.frac[i]
+
+
+class _SlicedEngineTable:
+    """A region's column slice of a parent ``_EngineTable``.
+
+    Region-local scoring (``repro.core.hierarchy``) scores the same
+    engines over a *subset* of the fleet's workers.  Every (engine,
+    worker) cell of the parent table is profiled independently, so a
+    column slice of the parent's [E, W] rows is bit-identical to a table
+    profiled fresh over the region's worker list — this view shares the
+    parent's rows (no re-profiling, no re-gathering) and slices with one
+    fancy index per call.  Duck-typed to ``_EngineTable``'s read API."""
+
+    def __init__(self, parent: _EngineTable, idx: np.ndarray):
+        self.parent = parent
+        self.idx = np.asarray(idx, dtype=np.intp)
+        self.workers = [parent.workers[i] for i in self.idx]
+        self.use_default = parent.use_default
+
+    def gather(self, jobs: Sequence[Job]):
+        p = self.parent
+        rows = p._rows(jobs)[:, None]
+        cols = self.idx
+        return p.qps[rows, cols], p.pre[rows, cols], p.frac[rows, cols]
+
+    def row(self, engine: str):
+        q, p, d = self.parent.row(engine)
+        return q[self.idx], p[self.idx], d[self.idx]
 
 
 # Interned worker tuples: the row cache below used to be keyed by
@@ -124,6 +158,26 @@ def _table(cd: ConfigDict, workers: List[str], use_default: bool,
     if tab is None:
         tab = cache[key] = _EngineTable(cd, workers, use_default)
     return tab
+
+
+def register_region_table(cd: ConfigDict, workers: Sequence[str],
+                          region_idx, use_default: bool = False,
+                          token: Optional[int] = None) -> int:
+    """Install a region's column-sliced view of the full-fleet row table
+    under the region worker tuple's interned token, and return that
+    token.  After this, every matrix builder above called with the
+    region's worker list (or its token) lands on the shared slice —
+    region-local scoring never re-profiles or re-gathers what the flat
+    table already holds.  Safe to share the cache slot with flat callers:
+    the sliced values agree bit-for-bit with a fresh region table."""
+    parent = _table(cd, list(workers), use_default, token)
+    idx = np.asarray(region_idx, dtype=np.intp)
+    rtok = intern_worker_tuple(cd, [workers[i] for i in idx])
+    cache = cd.__dict__.setdefault("_row_cache", {})
+    key = (use_default, rtok)
+    if key not in cache:
+        cache[key] = _SlicedEngineTable(parent, idx)
+    return rtok
 
 
 def engine_rows(cd: ConfigDict, engine: str, workers: List[str],

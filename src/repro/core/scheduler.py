@@ -123,18 +123,33 @@ class SynergAI(Policy):
             return self._schedule_fused(now, queue, cluster, avail, slots,
                                         t_rem, pen, has_ttft, has_tpot,
                                         batched, disagg, streaming)
-        if not (disagg or streaming or penalized):
+        if not (disagg or streaming):
             # the plain tick: every cached row is still exact, so only
             # Eq. 1's decay moves — urgency and doom are O(J) vector ops
             # (doomed == "no acceptable worker" == t_rem < min_w t_est)
-            # and placement walks rows lazily until the slots are filled
+            # and placement walks rows lazily until the slots are filled.
+            # The batched depth penalty only *scales* columns (pen >= 1),
+            # so doom stays decidable from the cached row minima for
+            # almost every job: t_rem < min_est dooms certainly, and a
+            # penalty-free argmin column acquits certainly; only jobs
+            # whose cheapest worker currently runs a live batch gather
+            # their row — incremental depth-penalty columns, never the
+            # full [J, W] rebuild.
             min_est = cache.min_estimate(slots)
             urgency = t_rem - min_est
             doomed = t_rem < min_est
+            if penalized:
+                unsure = ~doomed & (pen[cache.argmin_estimate(slots)]
+                                    != 1.0)
+                if unsure.any():
+                    ui = np.nonzero(unsure)[0]
+                    rows = cache.t_matrix(slots[ui]) * pen[None, :]
+                    doomed[ui] = ~(t_rem[ui, None] >= rows).any(axis=1)
             return self._place_lazy(now, queue, cluster, avail, cache,
-                                    slots, t_rem, urgency, doomed, batched)
-        # batching / phases / deadlines re-derive the whole matrix from
-        # the cached rows (still no ConfigDict gathers, no per-job Python)
+                                    slots, t_rem, urgency, doomed, batched,
+                                    pen if penalized else None)
+        # phases / deadlines re-derive the whole matrix from the cached
+        # rows (still no ConfigDict gathers, no per-job Python)
         t = cache.t_matrix(slots)
         phase = np.zeros(len(queue), dtype=np.int8)
         if streaming or disagg:
@@ -171,11 +186,14 @@ class SynergAI(Policy):
                            urgency, doomed, batched, phase)
 
     def _place_lazy(self, now, queue, cluster, avail, cache, slots, t_rem,
-                    urgency, doomed, batched):
+                    urgency, doomed, batched, pen=None):
         """Order by (urgency, doomed) and evaluate candidate rows one at
         a time, stopping once every open slot is filled — identical
         assignments to the full masked-argmin pass (same per-row
-        expressions, same tie-breaks), without materializing [J, W]."""
+        expressions, same tie-breaks), without materializing [J, W].
+        ``pen`` (batched depth penalties, or None when every batch is
+        empty) scales each row exactly like the full path's
+        ``t * pen[None, :]``."""
         order = np.lexsort((urgency, doomed))
         busy_wait = (cluster.busy_wait_array(now) if doomed.any()
                      else None)
@@ -187,6 +205,8 @@ class SynergAI(Policy):
         n_open = int(open_slots.sum())
         for ji in order:
             row = cache.row(slots[ji])
+            if pen is not None:
+                row = row * pen
             if doomed[ji]:
                 feas = np.isfinite(row)
                 cost = row + busy_wait

@@ -73,6 +73,7 @@ class ScoreCache:
         self._cap = cap
         self._t = np.empty((cap, W))        # Eq. 2 full-service rows
         self._min = np.empty(cap)           # min_w of each row
+        self._amin = np.empty(cap, np.intp)  # a column attaining that min
         self._pre = np.empty((cap, W)) if self._have_phase else None
         self._dec = np.empty((cap, W)) if self._have_phase else None
         self._qos = np.empty(cap)           # static job scalars
@@ -105,6 +106,7 @@ class ScoreCache:
         self._cap = new_cap
         self._t = wider(self._t, (new_cap, self._W))
         self._min = wider(self._min, new_cap)
+        self._amin = wider(self._amin, new_cap)
         if self._have_phase:
             self._pre = wider(self._pre, (new_cap, self._W))
             self._dec = wider(self._dec, (new_cap, self._W))
@@ -184,6 +186,7 @@ class ScoreCache:
         t = self._row_values(jobs, cd, cluster)
         self._t[dest] = t
         self._min[dest] = t.min(axis=1)
+        self._amin[dest] = t.argmin(axis=1) if t.shape[1] else 0
         if self._have_phase:
             pre_m, dec_m = phase_split_matrices(
                 cd, jobs, list(self._names), self.use_default,
@@ -242,8 +245,14 @@ class ScoreCache:
             with np.errstate(divide="ignore", invalid="ignore"):
                 t_new = np.where(qps > 0, pre + q[:, None] / qps, np.inf)
             self._t[sl, old_W:] = t_new
-            # min over (old row, new columns) == min over the full row
-            self._min[sl] = np.minimum(self._min[sl], t_new.min(axis=1))
+            # min over (old row, new columns) == min over the full row;
+            # the argmin hint moves only on a strict improvement (ties
+            # keep the old column — any minimizing index is valid)
+            new_min = t_new.min(axis=1)
+            better = new_min < self._min[sl]
+            self._amin[sl] = np.where(
+                better, old_W + t_new.argmin(axis=1), self._amin[sl])
+            self._min[sl] = np.minimum(self._min[sl], new_min)
             if self._have_phase:
                 pre_m, dec_m = phase_split_matrices(cd, jobs, new_names,
                                                     self.use_default)
@@ -278,6 +287,13 @@ class ScoreCache:
 
     def min_estimate(self, slots) -> np.ndarray:
         return self._min[slots]
+
+    def argmin_estimate(self, slots) -> np.ndarray:
+        """A column attaining each row's minimum — the fast-path hint
+        behind incremental depth-penalty doom: a job whose cheapest
+        worker carries no penalty is certainly not doomed, so only jobs
+        whose argmin column sits on a live batch gather their row."""
+        return self._amin[slots]
 
     def row(self, s: int) -> np.ndarray:
         """One job's cached [W] estimate row (a view, not a copy)."""

@@ -181,6 +181,47 @@ def kv_transfer_s(prof: BatchProfile) -> float:
     return DISAGG_XFER_LAT_S + prof.kv_job_bytes / DISAGG_XFER_GBPS
 
 
+def kv_region_transfer_s(prof: BatchProfile) -> float:
+    """``kv_transfer_s`` over the inter-region WAN link instead of the
+    in-region disaggregation fabric: what a decode leg pays when it lands
+    in a *different region* than its prefill pool."""
+    from repro.core.constants import REGION_XFER_GBPS, REGION_XFER_LAT_S
+    return REGION_XFER_LAT_S + prof.kv_job_bytes / REGION_XFER_GBPS
+
+
+def region_xfer_extra_s(prof: BatchProfile) -> float:
+    """The WAN surcharge on a cross-region KV handoff: the inter-region
+    transfer minus the in-region one already charged at admission (never
+    negative — the WAN link is strictly worse on both axes)."""
+    return max(0.0, kv_region_transfer_s(prof) - kv_transfer_s(prof))
+
+
+def region_transfer_s(payload_bytes: float) -> float:
+    """Seconds to ship ``payload_bytes`` over the inter-region link —
+    the REGION_XFER model behind cross-region *placement* (a spilled job's
+    input leaves its staged region)."""
+    from repro.core.constants import REGION_XFER_GBPS, REGION_XFER_LAT_S
+    return REGION_XFER_LAT_S + payload_bytes / REGION_XFER_GBPS
+
+
+def job_region_xfer_s(job, engines: Optional[dict] = None) -> float:
+    """Cross-region input-shipping cost for one job: its prompt tokens
+    (the ``Request`` when present, else the engine-default shape) at
+    ``TOKEN_BYTES`` each over the REGION_XFER link.  Decode legs of
+    disaggregated jobs ship KV instead (``region_xfer_extra_s``, charged
+    by the simulator at decode admission) — don't charge both."""
+    from repro.core.constants import TOKEN_BYTES
+    if job.request is not None:
+        tokens = job.request.prompt_tokens
+    else:
+        if engines is None:
+            from repro.core.engines import engine_catalogue
+            engines = engine_catalogue()
+        spec = engines.get(job.engine)
+        tokens = job.queries * spec.prefill_len if spec is not None else 0
+    return region_transfer_s(tokens * TOKEN_BYTES)
+
+
 def batch_stats(cluster) -> Dict[str, Dict[str, float]]:
     """Per-worker serving-bridge stats for demos and benchmarks."""
     from repro.core.simulator import BatchedWorkerSim

@@ -244,6 +244,11 @@ class Assignment:
     job: Job
     worker: str
     entry: Entry
+    # cross-region placement surcharge (repro/core/hierarchy.py): seconds
+    # of inter-region input shipping (REGION_XFER link) charged ahead of
+    # the job's service.  0.0 — the default every flat policy uses —
+    # changes nothing bit-for-bit.
+    xfer_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -584,6 +589,13 @@ class Policy:
     def on_arrival(self, job: Job, cluster: Cluster, now: float):
         pass
 
+    def on_requeue(self, job: Job, cluster: Cluster, now: float):
+        """A previously-placed (or staged) job re-entered the queue —
+        failure checkpoint-restart, or a parked KV cache lost with its
+        pool.  Routing policies re-evaluate the job here; the default is
+        inert so every flat policy is untouched."""
+        pass
+
     def schedule(self, now: float, queue: List[Job], cluster: Cluster
                  ) -> List[Assignment]:
         raise NotImplementedError
@@ -763,6 +775,8 @@ class Simulator:
                                 self._xfer_s.pop(jid, None)
                                 self._between.pop(jid, None)
                             queue.append(rec.job)   # checkpoint-restart
+                            self.policy.on_requeue(rec.job, self.cluster,
+                                                   now)
                     if self._disagg:
                         # pull-style staging parks the KV on a "both"
                         # prefill pool until the decode leg is admitted
@@ -775,7 +789,12 @@ class Simulator:
                                     and jid in self._xfer_s):
                                 self.cluster.job_phase[jid] = "prefill"
                                 del self._xfer_s[jid]
-                                del self._between[jid]
+                                brec_job = self._between.pop(jid).job
+                                # still queued, but its phase (and any
+                                # region affinity to the dead producer)
+                                # just changed under it
+                                self.policy.on_requeue(brec_job,
+                                                       self.cluster, now)
                     if isinstance(w, BatchedWorkerSim):
                         w.on_failure(now)
                 # 3) complete finished jobs (running is at most one record
@@ -958,6 +977,10 @@ class Simulator:
             exec_s *= float(self.rng.lognormal(-0.5 * s * s, s))
         if self.straggler_prob and self.rng.random() < self.straggler_prob:
             exec_s *= self.straggler_factor
+        if a.xfer_s:
+            # cross-region placement: the input ships over the REGION_XFER
+            # link before service starts (deterministic — not noise-scaled)
+            exec_s += a.xfer_s
         start = now
         end = start + exec_s
         w.busy_until = end
@@ -973,7 +996,7 @@ class Simulator:
                         exec_s, e2e, e2e > a.job.t_qos,
                         max(0.0, e2e - a.job.t_qos), overhead,
                         decision_time.get(a.job.id, 0.0))
-        self._job_mode_streaming(rec, a.entry, exec_s)
+        self._job_mode_streaming(rec, a.entry, exec_s, xfer_s=a.xfer_s)
         running[a.job.id] = rec
         self._notify_end_changed(a.job.id, end)
 
@@ -988,15 +1011,22 @@ class Simulator:
         spec = self._engines.get(job.engine)
         return job.queries * spec.decode_len if spec is not None else 0
 
-    def _job_mode_streaming(self, rec: JobResult, entry, exec_s: float):
+    def _job_mode_streaming(self, rec: JobResult, entry, exec_s: float,
+                            xfer_s: float = 0.0):
         """TTFT/TPOT for exclusive job-level service: the profiled
         prefill share of the (noisy) execution time marks the first
-        token; noise and stragglers stretch both phases alike."""
+        token; noise and stragglers stretch both phases alike.  A
+        cross-region shipping prefix (``Assignment.xfer_s``, already in
+        ``exec_s``) precedes the prefill, delaying the first token by its
+        full length."""
         from repro.core.serving_bridge import prefill_prefix
         job = rec.job
         base = exec_time(entry, job.queries)
+        if xfer_s:
+            exec_s -= xfer_s
+        first_s = xfer_s
         pre = prefill_prefix(entry, job.queries)
-        first_s = (pre / base) * exec_s if base > 0 else 0.0
+        first_s += (pre / base) * exec_s if base > 0 else 0.0
         rec.ttft = rec.waiting + first_s
         dtok = self._decode_tokens(job)
         rec.tpot = (exec_s - first_s) / dtok if dtok > 0 else math.nan
@@ -1076,6 +1106,13 @@ class Simulator:
         if self.straggler_prob and self.rng.random() < self.straggler_prob:
             work *= self.straggler_factor
             prefill *= self.straggler_factor
+        if a.xfer_s:
+            # cross-region placement: the input ships over the REGION_XFER
+            # link first.  Deterministic link time — not noise-scaled —
+            # and it precedes the prefill, so the first token waits on it.
+            work += a.xfer_s
+            if phase != "decode":
+                prefill += a.xfer_s
         if phase == "decode":
             # a cache parked on a "both" pool (pull-style staging) is
             # fetched now that the placement is known — free when the
@@ -1085,8 +1122,17 @@ class Simulator:
             # is not noise-scaled: link time is deterministic.  Pushed
             # caches paid the link before re-queueing (xfer is 0 here).
             xfer = self._xfer_s.pop(a.job.id, 0.0)
-            if a.worker != self._between[a.job.id].prefill_worker:
+            pw = self._between[a.job.id].prefill_worker
+            if a.worker != pw:
                 work += xfer
+                # a decode leg pulling its cache from another *region*
+                # pays the WAN surcharge on top of the in-region handoff
+                pws = self.cluster.workers.get(pw)
+                if (pws is not None
+                        and pws.pool.region != w.pool.region):
+                    from repro.core.serving_bridge import \
+                        region_xfer_extra_s
+                    work += region_xfer_extra_s(prof)
         w.accrue(now)
         w.admit(now, a.job.id, a.job.engine, a.entry, prof, track_req,
                 work, prefill)

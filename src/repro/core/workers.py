@@ -114,3 +114,15 @@ def synth_fleet(n_cloud: int = 1, n_edge_large: int = 1,
 
 def fleet_by_name(fleet=None) -> Dict[str, WorkerPool]:
     return {w.name: w for w in (fleet or default_fleet())}
+
+
+def region_groups(fleet) -> Dict[str, List[WorkerPool]]:
+    """Pools grouped by region tag, in fleet order within each group and
+    first-sighting order across groups (the canonical region ordering
+    used by ``repro.core.hierarchy``).  An untagged fleet collapses to
+    one ``""`` group — which is exactly the hierarchy's flat-equivalence
+    case."""
+    out: Dict[str, List[WorkerPool]] = {}
+    for w in fleet:
+        out.setdefault(w.region, []).append(w)
+    return out

@@ -472,6 +472,72 @@ def fleet_rate(cd: ConfigDict, fleet: Sequence[WorkerPool],
     return utilization / work
 
 
+def region_rates(cd: ConfigDict, fleet: Sequence[WorkerPool],
+                 utilization: float = 0.7,
+                 engines: Optional[Sequence[str]] = None,
+                 queries: int = DEFAULT_QUERIES) -> dict:
+    """Per-region arrival rates: ``fleet_rate`` over each region's pool
+    group of a tagged fleet (``WorkerPool.region``).  Regions differ in
+    capacity — and, with archetypes striped round-robin, in *feasible
+    engine set* — so one global rate over-drives small regions and idles
+    large ones; this is the calibration behind multi-region scenarios
+    and the hierarchy router's load picture.  Engines infeasible within
+    a region are dropped from that region's mix; a region where nothing
+    runs gets rate 0.0.  Untagged fleets collapse to ``{"": rate}``."""
+    from repro.core.workers import region_groups
+    engines = list(engines or default_engines())
+    out = {}
+    for r, pools in region_groups(fleet).items():
+        thr = engine_throughput(cd, pools, engines, queries)
+        feas = [e for e in engines if thr[e] > 0]
+        out[r] = (fleet_rate(cd, pools, utilization, feas,
+                             queries=queries) if feas else 0.0)
+    return out
+
+
+def regional_scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
+                      fleet: Optional[Sequence[WorkerPool]] = None,
+                      utilization: float = 0.7, seed: int = 0,
+                      serving: str = "job", streaming=None) -> List[Job]:
+    """Multi-region traffic for a tagged fleet: one independent
+    ``scenario`` stream per region, each calibrated (rate *and* engine
+    mix) against that region's own pools, merged by arrival time with
+    fresh sequential ids.  Job counts split proportional to the regional
+    rates (largest-remainder, so they sum to ``n_jobs`` exactly) and
+    each region draws from its own sub-seed.  Untagged or single-region
+    fleets fall through to plain ``scenario`` unchanged."""
+    from repro.core.workers import default_fleet, region_groups
+    fleet = list(fleet if fleet is not None else default_fleet())
+    groups = region_groups(fleet)
+    if len(groups) <= 1:
+        return scenario(cd, kind, n_jobs=n_jobs, fleet=fleet,
+                        utilization=utilization, seed=seed,
+                        serving=serving, streaming=streaming)
+    rates = region_rates(cd, fleet, utilization)
+    total = sum(rates.values())
+    names = list(groups)
+    if total <= 0:
+        raise ValueError("no engine is feasible in any region")
+    shares = [rates[r] / total for r in names]
+    counts = [int(n_jobs * s) for s in shares]
+    rema = sorted(range(len(names)),
+                  key=lambda i: (counts[i] - n_jobs * shares[i], i))
+    for i in range(n_jobs - sum(counts)):
+        counts[rema[i % len(names)]] += 1
+    jobs: List[Job] = []
+    for i, (r, n_r) in enumerate(zip(names, counts)):
+        if n_r <= 0:
+            continue
+        jobs.extend(scenario(cd, kind, n_jobs=n_r, fleet=groups[r],
+                             utilization=utilization,
+                             seed=seed + 7919 * (i + 1), serving=serving,
+                             streaming=streaming))
+    jobs.sort(key=lambda j: j.arrival)
+    for i, j in enumerate(jobs):
+        j.id = i
+    return jobs
+
+
 # engines light enough for edge pools vs the heavyweight cloud set — used
 # by the multi-tenant preset to shape per-tenant placement pressure
 EDGE_ENGINES = ("danube-1.8b/bf16", "gemma-2b/bf16", "gemma-2b/int8",

@@ -1,0 +1,353 @@
+"""Hierarchical region-sharded scheduling (``repro.core.hierarchy``):
+flat equivalence pinned against the PR 2 / PR 4 goldens, region-invariant
+properties (every arrival routed to exactly one region, region-local
+scoring never reads another region's pools, cross-region transfer cost
+charged iff the placement left the routed region, a correlated outage
+drains the region aggregate within one tick), the regional workload
+calibrator, and the flat-vs-hierarchical bench smoke leg."""
+
+import dataclasses
+import functools
+import hashlib
+
+import numpy as np
+import pytest
+from conftest import given, settings, st
+from test_streaming_qos import PR2_GOLDEN, STREAM_GOLDEN
+from test_trace_replay import REPLAY_GOLDEN_DIGEST, _result_key
+
+from repro.core.hierarchy import HierarchicalSynergAI
+from repro.core.job import Job
+from repro.core.offline import characterize
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import Simulator
+from repro.core.workers import region_groups, synth_fleet
+from repro.core.workload import (region_rates, regional_scenario, replay,
+                                 save_trace, scenario)
+
+
+@functools.lru_cache(maxsize=None)
+def _cd():
+    # session-style cache that doesn't tangle pytest fixtures with @given
+    return characterize()
+
+
+class _Recording(HierarchicalSynergAI):
+    """Snapshots each placed job's routed home *before* the tick pops it,
+    so tests can check transfer charging against the routing decision."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.record = []        # (job id, home region, pool region, xfer)
+
+    def schedule(self, now, queue, cluster):
+        homes = dict(self.router.home) if self.router else {}
+        out = super().schedule(now, queue, cluster)
+        for a in out:
+            self.record.append((a.job.id, homes.get(a.job.id),
+                                cluster.workers[a.worker].pool.region,
+                                a.xfer_s))
+        return out
+
+
+# ----------------------------------------------------------------------------
+# flat equivalence: regions=1 (and untagged) is bit-for-bit flat SynergAI
+
+
+@pytest.mark.parametrize("serving", ["job", "batched"])
+@pytest.mark.parametrize("regions", [0, 1])
+def test_flat_equivalence_full_stream(configdict, serving, regions):
+    """An untagged or single-region fleet makes the hierarchical policy
+    delegate wholesale to flat SynergAI — the full JobResult stream is
+    bit-level identical in both serving modes."""
+    fleet = synth_fleet(1, 2, 2, regions=regions)
+    jobs = scenario(configdict, "mmpp", n_jobs=120, fleet=fleet, seed=4,
+                    utilization=1.2, serving=serving)
+    flat = Simulator(configdict, SynergAI(), fleet=fleet, seed=4,
+                     serving=serving).run(jobs)
+    hier = Simulator(configdict, HierarchicalSynergAI(), fleet=fleet,
+                     seed=4, serving=serving).run(jobs)
+    assert _result_key(flat) == _result_key(hier)
+
+
+def test_regions1_reproduces_replay_golden_digest(configdict, tmp_path):
+    """The PR 4 golden digest (replayed MMPP schedule under flat
+    SynergAI, job mode) is reproduced bit-for-bit by the hierarchical
+    policy on the regions=1 fleet."""
+    jobs = scenario(configdict, "mmpp", n_jobs=40,
+                    fleet=synth_fleet(1, 2, 2), seed=7, utilization=1.2)
+    path = tmp_path / "golden.jsonl"
+    save_trace(path, jobs)
+    res = Simulator(configdict, HierarchicalSynergAI(),
+                    fleet=synth_fleet(1, 2, 2, regions=1),
+                    seed=7).run(replay(str(path)))
+    canon = "\n".join(
+        f"{r.job.id},{r.worker},{r.config},{r.start!r},{r.end!r},"
+        f"{r.ttft!r},{r.tpot!r},{int(r.violated)}"
+        for r in sorted(res, key=lambda r: r.job.id))
+    assert hashlib.sha256(canon.encode()).hexdigest() == \
+        REPLAY_GOLDEN_DIGEST
+
+
+def test_regions1_reproduces_pr2_batched_golden(configdict):
+    """The PR 2 batched golden rows survive the hierarchy unchanged."""
+    fleet = synth_fleet(1, 2, 2, regions=1)
+    jobs = scenario(configdict, "mmpp", n_jobs=40, fleet=fleet, seed=7,
+                    utilization=1.2, serving="batched")
+    res = {r.job.id: r for r in
+           Simulator(configdict, HierarchicalSynergAI(), fleet=fleet,
+                     seed=7, serving="batched").run(jobs)}
+    assert len(res) == 40
+    for jid, worker, start, end, exec_s, violated in PR2_GOLDEN:
+        r = res[jid]
+        assert r.worker == worker
+        assert r.start == pytest.approx(start, rel=1e-9)
+        assert r.end == pytest.approx(end, rel=1e-9)
+        assert r.exec_s == pytest.approx(exec_s, rel=1e-9)
+        assert r.violated == violated
+
+
+def test_regions1_reproduces_streaming_golden(configdict):
+    fleet = synth_fleet(1, 1, 1, regions=1)
+    jobs = scenario(configdict, "poisson", n_jobs=12, fleet=fleet,
+                    seed=11, utilization=1.0, serving="batched")
+    res = {r.job.id: r for r in
+           Simulator(configdict, HierarchicalSynergAI(), fleet=fleet,
+                     seed=11, serving="batched").run(jobs)}
+    for jid, ttft, tpot in STREAM_GOLDEN:
+        assert res[jid].ttft == pytest.approx(ttft, rel=1e-9), jid
+        assert res[jid].tpot == pytest.approx(tpot, rel=1e-9), jid
+
+
+# ----------------------------------------------------------------------------
+# region invariants
+
+
+def test_every_arrival_routed_to_exactly_one_region(configdict):
+    fleet = synth_fleet(2, 3, 3, regions=3)
+    pol = HierarchicalSynergAI()
+    sim = Simulator(configdict, pol, fleet=fleet, seed=0)
+    jobs = [Job(i, "gemma-2b/bf16", 500, 60.0, float(i)) for i in range(12)]
+    for j in jobs:
+        pol.on_arrival(j, sim.cluster, j.arrival)
+    regions = set(pol.router.regions)
+    assert regions == {"r0", "r1", "r2"}
+    for j in jobs:
+        assert pol.router.home[j.id] in regions
+    # re-announcing an arrival must not re-route it
+    homes = dict(pol.router.home)
+    for j in jobs:
+        pol.on_arrival(j, sim.cluster, j.arrival)
+    assert pol.router.home == homes
+
+
+def test_region_view_masks_equal_global_slices(configdict):
+    """Every RegionView vector view equals the cluster-wide view sliced
+    to the region's columns, bit-for-bit — region-local scoring sees
+    exactly what flat scoring would see for those pools."""
+    fleet = synth_fleet(2, 4, 4, disaggregate=True, regions=3)
+    pol = HierarchicalSynergAI()
+    sim = Simulator(configdict, pol, fleet=fleet, seed=0,
+                    serving="batched")
+    cl = sim.cluster
+    pol.on_arrival(Job(0, "gemma-2b/bf16", 500, 60.0, 0.0), cl, 0.0)
+    # make the masks non-trivial
+    cl.workers["edge-large"].busy_until = 10.0
+    cl.workers["edge-small__2"].failed_until = 10.0
+    for now in (0.0, 5.0):
+        g_avail = cl.avail_array(now)
+        g_wait = cl.busy_wait_array(now)
+        g_pen = cl.depth_penalty_array(now)
+        for v in pol._views.values():
+            idx = v._idx
+            np.testing.assert_array_equal(v.avail_array(now),
+                                          g_avail[idx])
+            np.testing.assert_array_equal(v.busy_wait_array(now),
+                                          g_wait[idx])
+            np.testing.assert_array_equal(v.depth_penalty_array(now),
+                                          g_pen[idx])
+            for ph in ("full", "prefill", "decode"):
+                np.testing.assert_array_equal(
+                    v.admit_engine_mask("gemma-2b/bf16", now, ph),
+                    cl.admit_engine_mask("gemma-2b/bf16", now, ph)[idx])
+
+
+def test_region_local_scoring_never_reads_other_regions(configdict):
+    """With spillover off, every sub-scheduler's score cache holds only
+    its own region's pools and every placement stays in the routed
+    region with no transfer charge."""
+    fleet = synth_fleet(2, 3, 3, regions=2)
+    groups = region_groups(fleet)
+    pol = _Recording(spill=False)
+    jobs = scenario(configdict, "mmpp", n_jobs=100, fleet=fleet, seed=6,
+                    utilization=1.2)
+    res = Simulator(configdict, pol, fleet=fleet, seed=6).run(jobs)
+    assert len(res) == 100
+    for r, sub in pol._subs.items():
+        assert set(sub.cache._names) <= {w.name for w in groups[r]}
+    assert pol.record and pol.spills == 0
+    for jid, home, pool_region, xfer in pol.record:
+        assert pool_region == home
+        assert xfer == 0.0
+
+
+def test_spill_charges_xfer_iff_cross_region(configdict):
+    """A slot-starved region spills to a foreign idle pool with the
+    REGION_XFER input transfer charged; home placements never pay it."""
+    fleet = synth_fleet(2, 2, 2, regions=2)
+    pol = _Recording()
+    sim = Simulator(configdict, pol, fleet=fleet, seed=0)
+    cl = sim.cluster
+    jobs = [Job(i, "gemma-2b/bf16", 500, 120.0, 0.0) for i in range(4)]
+    for j in jobs:
+        pol.on_arrival(j, cl, 0.0)
+        pol.router.home[j.id] = "r0"     # pin every home to r0 ...
+    for name, ws in cl.workers.items():  # ... and starve r0 of slots
+        if ws.pool.region == "r0":
+            ws.busy_until = 1_000.0
+    out = pol.schedule(1.0, jobs, cl)
+    assert out and pol.spills == len(out)
+    for jid, home, pool_region, xfer in pol.record:
+        assert home == "r0" and pool_region == "r1"
+        assert xfer > 0.0                # cross-region ⇒ charged
+    # now the inverse: an open home slot means no spill, no charge
+    pol2 = _Recording()
+    jobs2 = [Job(10 + i, "gemma-2b/bf16", 500, 120.0, 0.0)
+             for i in range(2)]
+    sim2 = Simulator(configdict, pol2, fleet=fleet, seed=0)
+    for j in jobs2:
+        pol2.on_arrival(j, sim2.cluster, 0.0)
+    pol2.schedule(0.0, jobs2, sim2.cluster)
+    for jid, home, pool_region, xfer in pol2.record:
+        assert (pool_region != home) == (xfer > 0.0)
+
+
+def test_outage_drains_region_aggregate_within_one_tick(configdict):
+    fleet = synth_fleet(2, 2, 2, regions=2)
+    pol = HierarchicalSynergAI()
+    sim = Simulator(configdict, pol, fleet=fleet, seed=0)
+    cl = sim.cluster
+    j0 = Job(0, "gemma-2b/bf16", 500, 60.0, 0.0)
+    pol.on_arrival(j0, cl, 0.0)
+    assert float(pol.router.healthy.min()) == 1.0
+    for name, ws in cl.workers.items():
+        if ws.pool.region == "r0":       # correlated regional outage
+            ws.failed_until = 500.0
+    pol.schedule(1.0, [j0], cl)          # the next tick refreshes
+    assert pol.router.healthy[pol.router._ri["r0"]] == 0.0
+    assert pol.router.healthy[pol.router._ri["r1"]] == 1.0
+    # new arrivals and failure requeues route around the downed region
+    j1 = Job(1, "gemma-2b/bf16", 500, 60.0, 1.0)
+    pol.on_arrival(j1, cl, 1.0)
+    assert pol.router.home[j1.id] == "r1"
+    pol.on_requeue(j0, cl, 1.0)
+    assert j0.id not in pol.router.home
+    pol.on_arrival(j0, cl, 1.0)
+    assert pol.router.home[j0.id] == "r1"
+
+
+def test_disaggregated_multi_region_completes_with_kv_handoff(configdict):
+    """Prefill/decode pools scattered across regions: every job still
+    completes (phase-aware routing + spillover), and cross-region decode
+    legs are charged at admission rather than via Assignment.xfer_s."""
+    fleet = synth_fleet(2, 4, 4, disaggregate=True, regions=2)
+    jobs = scenario(configdict, "mmpp", n_jobs=40, fleet=fleet, seed=3,
+                    utilization=1.1, serving="batched")
+    pol = HierarchicalSynergAI()
+    res = Simulator(configdict, pol, fleet=fleet, seed=3,
+                    serving="batched").run(jobs)
+    assert len(res) == 40
+    assert all(r.end >= r.start for r in res)
+
+
+# ----------------------------------------------------------------------------
+# property tier (hypothesis behind the conftest shim + seeded fallbacks)
+
+
+def _check_hier_invariants(seed, k, serving, utilization):
+    cd = _cd()
+    fleet = synth_fleet(2, 3, 3, regions=k)
+    jobs = scenario(cd, "mmpp", n_jobs=80, fleet=fleet, seed=seed,
+                    utilization=utilization, serving=serving)
+    pol = _Recording()
+    res = Simulator(cd, pol, fleet=fleet, seed=seed,
+                    serving=serving).run(jobs)
+    assert len(res) == len(jobs)         # nothing starves
+    regions = set(pol.router.regions)
+    for jid, home, pool_region, xfer in pol.record:
+        assert home in regions           # routed to exactly one region
+        # transfer charged iff the placement left the routed region
+        assert (pool_region != home) == (xfer > 0.0)
+
+
+@pytest.mark.parametrize("seed,k,serving,utilization", [
+    (1, 2, "job", 1.3),
+    (2, 3, "batched", 1.2),
+    (3, 4, "job", 0.8),
+])
+def test_hier_invariants_seeded(seed, k, serving, utilization):
+    _check_hier_invariants(seed, k, serving, utilization)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5),
+       serving=st.sampled_from(["job", "batched"]),
+       utilization=st.floats(0.6, 1.4))
+def test_hier_invariants_property(seed, k, serving, utilization):
+    """Routing uniqueness, completion, and the cross-region transfer
+    charge hold under random region counts, workloads and serving
+    modes."""
+    _check_hier_invariants(seed, k, serving, utilization)
+
+
+# ----------------------------------------------------------------------------
+# regional workload calibration
+
+
+def test_region_rates_per_region_feasibility(configdict):
+    fleet = synth_fleet(2, 3, 3, regions=3)
+    rates = region_rates(configdict, fleet)
+    assert set(rates) == {"r0", "r1", "r2"}
+    assert all(v > 0 for v in rates.values())
+    # untagged fleet: one "" group, matching the flat calibrator
+    flat = region_rates(configdict, synth_fleet(1, 2, 2))
+    assert list(flat) == [""] and flat[""] > 0
+
+
+def test_regional_scenario_merges_and_reindexes(configdict):
+    fleet = synth_fleet(2, 3, 3, regions=3)
+    jobs = regional_scenario(configdict, "mmpp", n_jobs=300, fleet=fleet,
+                             seed=2, utilization=0.9)
+    assert len(jobs) == 300
+    assert [j.id for j in jobs] == list(range(300))
+    arrivals = [j.arrival for j in jobs]
+    assert arrivals == sorted(arrivals)
+    # single-region input falls through to the flat scenario generator
+    flat_fleet = synth_fleet(1, 2, 2)
+    a = regional_scenario(configdict, "mmpp", n_jobs=50, fleet=flat_fleet,
+                          seed=2, utilization=0.9)
+    b = scenario(configdict, "mmpp", n_jobs=50, fleet=flat_fleet,
+                 seed=2, utilization=0.9)
+    key = lambda js: [(j.id, j.arrival, j.engine, j.queries, j.t_qos)
+                      for j in js]
+    assert key(a) == key(b)
+
+
+# ----------------------------------------------------------------------------
+# bench smoke
+
+
+def test_bench_regions_smoke(configdict):
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from scheduler_experiments import bench_regions
+    blob = bench_regions(configdict, smoke=True, emit=lambda *a: None)
+    assert blob["bench"] == "bench_regions" and blob["schema"] == 1
+    variants = {c["variant"] for c in blob["configs"]}
+    assert variants == {"flat", "hier"}
+    for c in blob["configs"]:
+        assert c["mean_tick_ms"] > 0 and c["regions"] == 4
+    # the smoke leg never emits the nightly headline (its ratio is noise)
+    assert "regions_headline" not in blob

@@ -182,6 +182,70 @@ def test_first_sighted_engine_extends_table_rows():
     np.testing.assert_array_equal(cache.t_matrix(slots), ref.t_estimated)
 
 
+def test_argmin_hint_is_true_minimizer_through_column_extension(configdict):
+    """``argmin_estimate`` (the incremental depth-penalty fast path's
+    acquittal hint) always points at a true minimizer of the cached row
+    — including after an elastic column extension changes which worker
+    is fastest."""
+    import dataclasses
+
+    cd = configdict
+    fleet = synth_fleet(1, 2, 2)
+    sim, cluster = _sim_cluster(cd, fleet=fleet)
+    jobs = make_experiment(cd, "DL", "FH", seed=3)
+    cache = ScoreCache()
+
+    def check(slots):
+        t = cache.t_matrix(slots)
+        amin = cache.argmin_estimate(slots)
+        np.testing.assert_array_equal(t[np.arange(len(t)), amin],
+                                      t.min(axis=1))
+        np.testing.assert_array_equal(cache.min_estimate(slots),
+                                      t.min(axis=1))
+
+    check(cache.sync(cd, jobs, cluster))
+    # append a cloud clone: the extension path must keep the hint valid
+    base = cluster.workers["cloud-pod"].pool
+    clone = dataclasses.replace(base, name="cloud-pod__amin")
+    cluster.workers[clone.name] = cluster._make_worker(clone)
+    slots = cache.sync(cd, jobs, cluster)
+    assert cache.col_extends == 1
+    check(slots)
+
+
+class _PenProbeSynergAI(SynergAI):
+    """Flags ticks where the batched depth penalty is actually active
+    (some worker mid-batch), so the equivalence assertion below is
+    known to exercise the penalized incremental fast path."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.saw_penalty = False
+
+    def schedule(self, now, queue, cluster):
+        if (cluster.depth_penalty_array(now) != 1.0).any():
+            self.saw_penalty = True
+        return super().schedule(now, queue, cluster)
+
+
+def test_penalized_incremental_matches_uncached_at_depth():
+    """serving='batched' with live batch depths: the incremental lazy
+    path (argmin-hint doom short-circuit over penalized rows) stays
+    bit-for-bit identical to the uncached full-matrix path, and batch
+    depth actually changed across ticks (the penalty was exercised)."""
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2)
+    for seed in (3, 9):
+        jobs = scenario(cd, "mmpp", n_jobs=150, fleet=fleet, seed=seed,
+                        utilization=1.5, serving="batched")
+        kw = dict(fleet=fleet, seed=seed, serving="batched")
+        probe = _PenProbeSynergAI()
+        a = _run(cd, probe, jobs, **kw)
+        b = _run(cd, SynergAI(incremental=False), jobs, **kw)
+        assert probe.saw_penalty     # depth > 0 happened mid-run
+        assert a == b
+
+
 def test_requeued_job_reuses_warm_row(configdict):
     """Slots are reclaimed lazily: a job that leaves the queue (placed)
     and comes back (failure requeue) finds its row slot intact."""

@@ -13,9 +13,12 @@ full-matrix rebuild — a real regression, not runner noise.  Pass
 ``--absolute`` to additionally gate the raw ``mean_tick_ms`` numbers
 (useful when baseline and fresh run on pinned identical hardware).
 
-The headline floor (cached >= 5x uncached at the 10k-job x 64-pool
-backlog, the PR acceptance bar) is always enforced when the fresh run
-contains that config.
+The headline floors (cached >= 5x uncached at the 10k-job x 64-pool
+backlog; hierarchical >= 4x flat at the region-sharded W=2048 fleet,
+``regions_headline`` from ``bench_regions``) are always enforced when
+the fresh run contains those configs.  ``speedup_hier_vs_flat`` entries
+are gated exactly like ``speedup_vs_uncached`` — both sides measured
+in-process, so the ratio is hardware-independent.
 
 Usage:  python tools/check_perf_regression.py BENCH_SCHED.json fresh.json
 """
@@ -27,10 +30,15 @@ import json
 import sys
 
 HEADLINE_FLOOR = 5.0        # cached vs uncached at J=10k, W=64
+REGIONS_FLOOR = 4.0         # hierarchical vs flat at W=2048, k>=16
+
+# the hardware-independent per-config ratios the gate watches
+_SPEEDUPS = ("speedup_vs_uncached", "speedup_hier_vs_flat")
 
 
 def _index(blob):
-    return {(c["variant"], c["J"], c["W"], c.get("serving", "job")): c
+    return {(c["variant"], c["J"], c["W"], c.get("serving", "job"),
+             c.get("regions", 0)): c
             for c in blob.get("configs", [])}
 
 
@@ -55,18 +63,19 @@ def main(argv=None):
         if bc is None:
             print(f"note {key}: no baseline entry, skipping")
             continue
-        b_speed = bc.get("speedup_vs_uncached")
-        f_speed = fc.get("speedup_vs_uncached")
-        if b_speed and f_speed:
-            ratio = f_speed / b_speed
-            tag = "ok  " if ratio >= 1.0 - args.threshold else "FAIL"
-            print(f"{tag} {key}: speedup {b_speed:.2f}x -> "
-                  f"{f_speed:.2f}x ({ratio:.2f} of baseline)")
-            if ratio < 1.0 - args.threshold:
-                failures.append(
-                    f"{key}: speedup_vs_uncached regressed to "
-                    f"{ratio:.2f} of baseline (threshold "
-                    f"{1.0 - args.threshold:.2f})")
+        for speed_key in _SPEEDUPS:
+            b_speed = bc.get(speed_key)
+            f_speed = fc.get(speed_key)
+            if b_speed and f_speed:
+                ratio = f_speed / b_speed
+                tag = "ok  " if ratio >= 1.0 - args.threshold else "FAIL"
+                print(f"{tag} {key}: {speed_key} {b_speed:.2f}x -> "
+                      f"{f_speed:.2f}x ({ratio:.2f} of baseline)")
+                if ratio < 1.0 - args.threshold:
+                    failures.append(
+                        f"{key}: {speed_key} regressed to "
+                        f"{ratio:.2f} of baseline (threshold "
+                        f"{1.0 - args.threshold:.2f})")
         if args.absolute:
             ratio = fc["mean_tick_ms"] / bc["mean_tick_ms"]
             tag = "ok  " if ratio <= 1.0 + args.threshold else "FAIL"
@@ -87,6 +96,18 @@ def main(argv=None):
             failures.append(
                 f"headline cached-vs-uncached speedup {speed:.2f}x "
                 f"below the {HEADLINE_FLOOR:.0f}x acceptance floor")
+    rhead = fresh_blob.get("regions_headline")
+    if rhead:
+        speed = rhead.get("speedup_hier_vs_flat", 0.0)
+        tag = "ok  " if speed >= REGIONS_FLOOR else "FAIL"
+        print(f"{tag} regions_headline J={rhead.get('J')} "
+              f"W={rhead.get('W')} k={rhead.get('regions')}: "
+              f"hierarchical {speed:.2f}x flat "
+              f"(floor {REGIONS_FLOOR:.0f}x)")
+        if speed < REGIONS_FLOOR:
+            failures.append(
+                f"regions_headline hier-vs-flat speedup {speed:.2f}x "
+                f"below the {REGIONS_FLOOR:.0f}x acceptance floor")
     if failures:
         print("\nperf regression gate FAILED:")
         for f_ in failures:
