@@ -557,13 +557,125 @@ def bench_traces(cd=None, n_jobs=1500, pools=(2, 5, 5), utilization=1.3,
          f"failure_events={len(failures)}")
     sweep("outage", jobs, failures=failures)
 
+    # (d) drift + online re-characterization: unmodeled pool slowdowns
+    # (synth_degradations) under the drift mix, SynergAI with a stale
+    # offline profile vs the online loop vs the true-factor oracle
+    from repro.core.recharacterize import OnlineRecharacterizer
+    from repro.core.simulator import Cluster
+    from repro.core.workload import synth_degradations
+    degs = synth_degradations(fleet, drift_jobs[-1].arrival, factor=5.0,
+                              fraction=0.35, prefix="edge", seed=0)
+    truth = {d.worker: d.factor for d in degs}
+    for name, rc in (("stale", None), ("online", OnlineRecharacterizer()),
+                     ("oracle", None)):
+        if name == "oracle":
+            rc = OnlineRecharacterizer(detect=False)
+            rc.seed(Cluster(cd, list(fleet)), worker_factors=truth)
+        t0 = time.perf_counter()
+        res = Simulator(cd, SynergAI(recharacterizer=rc), fleet=fleet,
+                        degradations=degs, seed=0).run(list(drift_jobs))
+        dt = time.perf_counter() - t0
+        s = summarize(res)
+        out[("drift+recharacterize", name)] = s
+        extra = (f",refreshes={rc.refreshes}"
+                 if rc is not None and name == "online" else "")
+        emit(f"traces,drift+recharacterize,{name},"
+             f"violations={s['violations']},"
+             f"wait_s={s['waiting_avg_s']:.1f},"
+             f"p99_s={s['e2e_p99_s']:.1f},wall_s={dt:.2f}{extra}")
+
     v = lambda section, name: out[(section, name)]["violations"]
     base_names = ["RR", "SRR", "LRU", "MRU", "BE"]
     for section in ("replay", "drift", "outage"):
         v_base = np.mean([v(section, n) for n in base_names])
         emit(f"traces_headline,{section},baselines_over_synergai="
              f"{v_base / max(1, v(section, 'SynergAI')):.2f}x")
+    emit(f"traces_headline,drift+recharacterize,stale_over_online="
+         f"{v('drift+recharacterize', 'stale') / max(1, v('drift+recharacterize', 'online')):.2f}x")
     return out
+
+
+def bench_drift_recovery(cd=None, n_jobs=6000, pools=(2, 5, 5),
+                         n_regions=3, utilization=0.6, factor=5.0,
+                         fraction=0.35, smoke=False, emit=print):
+    """Violations under unmodeled physics drift, with and without the
+    online re-characterization loop — the committed ``drift_headline``
+    the nightly perf gate enforces.
+
+    A third of the way into a drift-mix trace, ``fraction`` of the edge
+    pools silently degrade to ``factor``x their characterized service
+    time (``synth_degradations`` — thermal throttling, a colocated
+    tenant; nothing tells the policies).  Three SynergAI runs on the
+    identical trace and degradation timeline:
+
+    - ``stale``  — the offline profile, trusted forever (the paper's
+      open loop; keeps placing work on pools it believes are fast).
+    - ``online`` — ``OnlineRecharacterizer``: residual-triggered
+      refreshes re-fit the per-(engine, worker) effective rates and
+      placement routes around the slow pools within a few completions.
+    - ``oracle`` — the true factors installed at t=0 with detection
+      muted: the floor the online loop converges toward.
+
+    The headline ``violation_ratio_stale_vs_online`` is deterministic
+    (fixed seeds, fixed timeline) and hardware-independent, so the gate
+    fails on any code change that erodes recovery by >30% — and on a
+    drop below the 5x acceptance floor.  ``smoke=True`` shrinks the
+    trace to a seconds-long CI sanity leg (the ratio is noise at that
+    size; the smoke leg only proves the bench runs)."""
+    from repro.core.recharacterize import OnlineRecharacterizer
+    from repro.core.simulator import Cluster
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import scenario, synth_degradations
+
+    cd = cd or characterize()
+    if smoke:
+        n_jobs = 800
+    fleet = synth_fleet(*pools, regions=n_regions)
+    W = len(fleet)
+    jobs = scenario(cd, "drift", n_jobs=n_jobs, fleet=fleet,
+                    utilization=utilization, seed=0)
+    degs = synth_degradations(fleet, jobs[-1].arrival, factor=factor,
+                              fraction=fraction, prefix="edge", seed=0)
+    truth = {d.worker: d.factor for d in degs}
+    blob = {"schema": 1, "bench": "bench_drift_recovery", "configs": []}
+    viol = {}
+    for name in ("stale", "online", "oracle"):
+        rc = None
+        if name == "online":
+            rc = OnlineRecharacterizer()
+        elif name == "oracle":
+            rc = OnlineRecharacterizer(detect=False)
+            rc.seed(Cluster(cd, list(fleet)), worker_factors=truth)
+        t0 = time.perf_counter()
+        res = Simulator(cd, SynergAI(recharacterizer=rc), fleet=fleet,
+                        degradations=degs, seed=0).run(list(jobs))
+        dt = time.perf_counter() - t0
+        s = summarize(res)
+        viol[name] = s["violations"]
+        cfg = {"variant": f"drift-{name}", "J": n_jobs, "W": W,
+               "serving": "job", "factor": factor, "fraction": fraction,
+               "violations": s["violations"],
+               "wait_avg_s": s["waiting_avg_s"],
+               "e2e_p99_s": s["e2e_p99_s"], "wall_s": dt}
+        if name == "online":
+            cfg["refreshes"] = rc.refreshes
+        blob["configs"].append(cfg)
+        emit(f"drift_recovery,{name},J={n_jobs},W={W},"
+             f"violations={s['violations']},wall_s={dt:.2f}")
+    ratio = viol["stale"] / max(1, viol["online"])
+    for cfg in blob["configs"]:
+        if cfg["variant"] == "drift-online":
+            cfg["violation_ratio_stale_vs_online"] = ratio
+    if not smoke:
+        blob["drift_headline"] = {
+            "J": n_jobs, "W": W, "factor": factor, "fraction": fraction,
+            "violations_stale": viol["stale"],
+            "violations_online": viol["online"],
+            "violations_oracle": viol["oracle"],
+            "violation_ratio_stale_vs_online": ratio}
+    emit(f"drift_recovery_headline,stale_over_online={ratio:.2f}x,"
+         f"oracle_violations={viol['oracle']}")
+    return blob
 
 
 def main(argv=None):
@@ -610,6 +722,12 @@ def main(argv=None):
     p.add_argument("--regions-smoke", action="store_true",
                    help="run bench_regions at smoke size only (seconds; "
                         "the tier-1 CI sanity leg)")
+    p.add_argument("--skip-drift", action="store_true",
+                   help="skip the stale vs online re-characterization "
+                        "drift-recovery bench (bench_drift_recovery)")
+    p.add_argument("--drift-smoke", action="store_true",
+                   help="run bench_drift_recovery at smoke size only "
+                        "(seconds; the tier-1 CI sanity leg)")
     p.add_argument("--json", metavar="PATH", default=None,
                    help="dump the serving/streaming bench summaries as "
                         "JSON (CI artifact)")
@@ -638,6 +756,16 @@ def main(argv=None):
             sched["configs"].extend(reg["configs"])
             if "regions_headline" in reg:
                 sched["regions_headline"] = reg["regions_headline"]
+    if not args.skip_drift:
+        print("# drift recovery: stale profile vs online "
+              "re-characterization vs oracle")
+        drift = bench_drift_recovery(cd, smoke=args.drift_smoke)
+        if sched is None:
+            sched = drift
+        else:
+            sched["configs"].extend(drift["configs"])
+            if "drift_headline" in drift:
+                sched["drift_headline"] = drift["drift_headline"]
     if args.sched_json and sched is not None:
         import json
         with open(args.sched_json, "w") as f:

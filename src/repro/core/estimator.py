@@ -9,6 +9,7 @@ is validated against this module in the kernel tests.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -17,6 +18,87 @@ from repro.core.configdict import ConfigDict
 from repro.core.job import Job
 
 NEG = np.float64(np.inf)
+
+# ---------------------------------------------------------------------------
+# profile overlays (online re-characterization, docs/scenarios.md)
+#
+# A profile overlay is a per-consumer set of *belief* corrections over the
+# offline profile: per-(engine, worker) multiplicative factors on the
+# profiled qps.  Overlays never touch the ConfigDict entries themselves —
+# the simulator's ground-truth execution times stay exactly the offline
+# characterization — they only scale the [E, W] rows the schedulers score
+# with.  Profile id 0 is the pristine profile (no overlay, no extra cache
+# key component, bit-for-bit the historical tables); nonzero ids are
+# allocated per ``OnlineRecharacterizer`` so two policies sharing one
+# ConfigDict never see each other's refreshes.
+
+_PROFILE_IDS = itertools.count(1)
+
+
+def new_profile_id() -> int:
+    """A process-unique nonzero profile id (one per overlay consumer)."""
+    return next(_PROFILE_IDS)
+
+
+class ProfileOverlay:
+    """Mutable per-(engine, worker) qps scale factors for one profile id,
+    plus the generation bookkeeping score caches invalidate against:
+    ``gen`` bumps once per ``apply`` and ``touched[engine]`` records the
+    generation that last refreshed each engine, so a cache can reclaim
+    exactly the refreshed engines' rows and nothing else."""
+
+    def __init__(self, cd: ConfigDict, pid: int):
+        self.cd = cd
+        self.pid = pid
+        self.gen = 0
+        self.scale: Dict[str, Dict[str, float]] = {}
+        self.touched: Dict[str, int] = {}
+
+    def factors(self, engine: str, workers: Sequence[str]) -> np.ndarray:
+        """[W] qps scale vector for ``engine`` over ``workers``."""
+        s = self.scale.get(engine)
+        if not s:
+            return np.ones(len(workers))
+        return np.fromiter((s.get(w, 1.0) for w in workers),
+                           dtype=np.float64, count=len(workers))
+
+    def apply(self, updates: Dict[str, Dict[str, float]]) -> int:
+        """One refresh: install new scale maps for ``updates``' engines,
+        bump the generation, and write the refreshed rows through every
+        already-built table of this profile (region slices read through
+        their parent's arrays, so they update for free).  Returns the new
+        generation."""
+        if not updates:
+            return self.gen
+        self.gen += 1
+        for engine, factors in updates.items():
+            self.scale[engine] = dict(factors)
+            self.touched[engine] = self.gen
+        for tab in self.cd.__dict__.get("_row_cache", {}).values():
+            if getattr(tab, "profile", 0) == self.pid:
+                for engine in updates:
+                    tab._refresh_engine(engine)
+        return self.gen
+
+
+def profile_overlay(cd: ConfigDict, pid: int) -> ProfileOverlay:
+    """The overlay for ``pid`` on ``cd`` (created on first use)."""
+    overlays = cd.__dict__.setdefault("_profile_overlays", {})
+    ov = overlays.get(pid)
+    if ov is None:
+        ov = overlays[pid] = ProfileOverlay(cd, pid)
+    return ov
+
+
+def profile_gen(cd: ConfigDict, pid: int) -> int:
+    """Generation counter of profile ``pid`` on ``cd`` — the score-cache
+    invalidation token mirroring ``Cluster.fleet_gen``/``fail_gen``.
+    Always 0 for the pristine profile (id 0) and for overlays that never
+    refreshed, so pristine cache keys are unchanged."""
+    if not pid:
+        return 0
+    ov = cd.__dict__.get("_profile_overlays", {}).get(pid)
+    return ov.gen if ov is not None else 0
 
 
 @dataclasses.dataclass
@@ -39,16 +121,17 @@ class _EngineTable:
     single C-speed fancy index instead of J x W ConfigDict lookups."""
 
     def __init__(self, cd: ConfigDict, workers: List[str],
-                 use_default: bool):
+                 use_default: bool, profile: int = 0):
         self.cd = cd
         self.workers = list(workers)
         self.use_default = use_default
+        self.profile = profile
         self.index: Dict[str, int] = {}
         self.qps = np.empty((0, len(workers)))
         self.pre = np.empty((0, len(workers)))
         self.frac = np.empty((0, len(workers)))   # decode_frac (clamped)
 
-    def _add(self, engine: str):
+    def _profiled_row(self, engine: str):
         from repro.core.serving_bridge import decode_fraction
         W = len(self.workers)
         q = np.zeros(W)
@@ -61,10 +144,29 @@ class _EngineTable:
                 q[wi] = ent.qps
                 p[wi] = ent.preproc_s
                 d[wi] = decode_fraction(ent)
+        if self.profile:
+            q *= profile_overlay(self.cd, self.profile).factors(
+                engine, self.workers)
+        return q, p, d
+
+    def _add(self, engine: str):
+        q, p, d = self._profiled_row(engine)
         self.index[engine] = len(self.qps)
         self.qps = np.vstack([self.qps, q[None]])
         self.pre = np.vstack([self.pre, p[None]])
         self.frac = np.vstack([self.frac, d[None]])
+
+    def _refresh_engine(self, engine: str):
+        """Rebuild one engine's row in place from the ConfigDict and the
+        current overlay factors (``ProfileOverlay.apply`` write-through;
+        region slices read these arrays and see the update for free)."""
+        i = self.index.get(engine)
+        if i is None:
+            return
+        q, p, d = self._profiled_row(engine)
+        self.qps[i] = q
+        self.pre[i] = p
+        self.frac[i] = d
 
     def _rows(self, jobs: Sequence[Job]) -> np.ndarray:
         """[J] row indices into the [E, W] tables, profiling any engine
@@ -112,6 +214,11 @@ class _SlicedEngineTable:
         self.idx = np.asarray(idx, dtype=np.intp)
         self.workers = [parent.workers[i] for i in self.idx]
         self.use_default = parent.use_default
+        self.profile = parent.profile
+
+    def _refresh_engine(self, engine: str):
+        """No-op: slices hold no rows — they read the parent's arrays,
+        which ``ProfileOverlay.apply`` already refreshed."""
 
     def gather(self, jobs: Sequence[Job]):
         p = self.parent
@@ -146,23 +253,27 @@ def intern_worker_tuple(cd: ConfigDict, workers) -> int:
 
 
 def _table(cd: ConfigDict, workers: List[str], use_default: bool,
-           token: Optional[int] = None) -> _EngineTable:
-    """The per-(use_default, worker-tuple) ``_EngineTable``, cached on the
-    ConfigDict (one cache shared by every matrix builder below).  ``token``
-    is the pre-interned worker-tuple id (``intern_worker_tuple``); passing
-    it skips re-hashing the tuple on the per-tick hot path."""
+           token: Optional[int] = None, profile: int = 0) -> _EngineTable:
+    """The per-(use_default, worker-tuple[, profile]) ``_EngineTable``,
+    cached on the ConfigDict (one cache shared by every matrix builder
+    below).  ``token`` is the pre-interned worker-tuple id
+    (``intern_worker_tuple``); passing it skips re-hashing the tuple on
+    the per-tick hot path.  ``profile`` selects a ``ProfileOverlay``'s
+    belief-scaled tables; 0 (pristine) keeps the historical 2-tuple key,
+    so pre-overlay cache entries are untouched."""
     cache = cd.__dict__.setdefault("_row_cache", {})
-    key = (use_default,
-           intern_worker_tuple(cd, workers) if token is None else token)
+    tok = intern_worker_tuple(cd, workers) if token is None else token
+    key = (use_default, tok) if not profile else (use_default, tok, profile)
     tab = cache.get(key)
     if tab is None:
-        tab = cache[key] = _EngineTable(cd, workers, use_default)
+        tab = cache[key] = _EngineTable(cd, workers, use_default, profile)
     return tab
 
 
 def register_region_table(cd: ConfigDict, workers: Sequence[str],
                           region_idx, use_default: bool = False,
-                          token: Optional[int] = None) -> int:
+                          token: Optional[int] = None,
+                          profile: int = 0) -> int:
     """Install a region's column-sliced view of the full-fleet row table
     under the region worker tuple's interned token, and return that
     token.  After this, every matrix builder above called with the
@@ -170,35 +281,38 @@ def register_region_table(cd: ConfigDict, workers: Sequence[str],
     region-local scoring never re-profiles or re-gathers what the flat
     table already holds.  Safe to share the cache slot with flat callers:
     the sliced values agree bit-for-bit with a fresh region table."""
-    parent = _table(cd, list(workers), use_default, token)
+    parent = _table(cd, list(workers), use_default, token, profile)
     idx = np.asarray(region_idx, dtype=np.intp)
     rtok = intern_worker_tuple(cd, [workers[i] for i in idx])
     cache = cd.__dict__.setdefault("_row_cache", {})
-    key = (use_default, rtok)
+    key = ((use_default, rtok) if not profile
+           else (use_default, rtok, profile))
     if key not in cache:
         cache[key] = _SlicedEngineTable(parent, idx)
     return rtok
 
 
 def engine_rows(cd: ConfigDict, engine: str, workers: List[str],
-                use_default: bool = False, token: Optional[int] = None):
+                use_default: bool = False, token: Optional[int] = None,
+                profile: int = 0):
     """One engine's (qps, preproc, decode_frac) vectors over ``workers``
     (``qps == 0`` marks infeasible pools), from the shared row cache."""
-    return _table(cd, workers, use_default, token).row(engine)
+    return _table(cd, workers, use_default, token, profile).row(engine)
 
 
 def score_matrices(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
-                   use_default: bool = False, token: Optional[int] = None):
+                   use_default: bool = False, token: Optional[int] = None,
+                   profile: int = 0):
     """[J, W] qps / preproc matrices from the Configuration Dictionary
     (``qps == 0`` marks infeasible pairs), cached per worker tuple on the
     ConfigDict.  Shared input builder for the numpy scorer below and the
     Pallas kernel path (``repro.core.pallas_scoring``)."""
-    return _table(cd, workers, use_default, token).gather(jobs)[:2]
+    return _table(cd, workers, use_default, token, profile).gather(jobs)[:2]
 
 
 def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
                          workers: List[str], use_default: bool = False,
-                         token: Optional[int] = None):
+                         token: Optional[int] = None, profile: int = 0):
     """[J, W] (prefill_s, decode_s) solo-service matrices (inf where
     infeasible): the prefill prefix ``pre + (q/qps) * (1 - decode_frac)``
     — a worker's TTFT contribution — and the per-token decode remainder
@@ -206,7 +320,8 @@ def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
     split is what streaming-QoS gating and phase-aware placement under
     disaggregated pools score against (shares the per-worker-tuple row
     cache with ``score_matrices``)."""
-    qps, pre, frac = _table(cd, workers, use_default, token).gather(jobs)
+    qps, pre, frac = _table(cd, workers, use_default, token,
+                            profile).gather(jobs)
     q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
                     count=len(jobs))
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -218,10 +333,12 @@ def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
 
 def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
                     now: float, use_default: bool = False,
-                    token: Optional[int] = None) -> ScoreResult:
+                    token: Optional[int] = None,
+                    profile: int = 0) -> ScoreResult:
     """Vectorized Eq. 1-4 over all queued jobs and all workers."""
     J = len(jobs)
-    qps, pre = score_matrices(cd, jobs, workers, use_default, token)
+    qps, pre = score_matrices(cd, jobs, workers, use_default, token,
+                              profile)
     q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
                     count=J)
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -241,9 +358,11 @@ def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
                        best.astype(np.int64), urgency, doomed)
 
 
-# score_fn protocol marker: SynergAI forwards the cluster's interned
-# worker token to backends that advertise support for it
+# score_fn protocol markers: SynergAI forwards the cluster's interned
+# worker token — and, when a recharacterizer is attached, the profile
+# overlay id — to backends that advertise support for them
 estimate_matrix.takes_token = True
+estimate_matrix.takes_profile = True
 
 
 def candidate_order(score: ScoreResult, ji: int,

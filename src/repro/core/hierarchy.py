@@ -91,7 +91,8 @@ class RegionView:
     pure comparisons on the same values, so the masks equal the global
     masks sliced, bit-for-bit.  Never mutates the cluster."""
 
-    def __init__(self, cluster: Cluster, region: str, idx):
+    def __init__(self, cluster: Cluster, region: str, idx,
+                 profile: int = 0):
         self._c = cluster
         self.region = region
         self._idx = np.asarray(idx, dtype=np.intp)
@@ -106,7 +107,7 @@ class RegionView:
         self.serial = (cluster.serial, region)
         self.worker_token = register_region_table(
             cluster.cd, a.names, self._idx, use_default=False,
-            token=cluster.worker_token)
+            token=cluster.worker_token, profile=profile)
 
     # -- cache identity -------------------------------------------------
 
@@ -289,10 +290,16 @@ class HierarchicalSynergAI(Policy):
     use_default_config = False
 
     def __init__(self, score_fn=None, incremental: bool = True,
-                 spill: bool = True):
+                 spill: bool = True, recharacterizer=None):
         self._score_fn = score_fn
         self._incremental = incremental
         self.spill = spill
+        # one shared recharacterizer: each region feeds its own drift
+        # detector window (observe_arrival(region=...)), any region's
+        # trigger runs the single global refresh, and every sub-core's
+        # score cache reads the same profile overlay
+        self.recharacterizer = recharacterizer
+        self.profile = recharacterizer.profile if recharacterizer else 0
         self.router: Optional[RegionRouter] = None
         self._views: Dict[str, RegionView] = {}
         self._subs: Dict[str, SynergAI] = {}
@@ -304,7 +311,8 @@ class HierarchicalSynergAI(Policy):
         sub = self._subs.get(region)
         if sub is None:
             sub = self._subs[region] = SynergAI(
-                score_fn=self._score_fn, incremental=self._incremental)
+                score_fn=self._score_fn, incremental=self._incremental,
+                recharacterizer=self.recharacterizer)
         return sub
 
     def _ensure(self, cluster: Cluster):
@@ -314,7 +322,7 @@ class HierarchicalSynergAI(Policy):
         groups: Dict[str, List[int]] = {}
         for i, ws in enumerate(cluster.workers.values()):
             groups.setdefault(ws.pool.region, []).append(i)
-        self._views = {r: RegionView(cluster, r, idx)
+        self._views = {r: RegionView(cluster, r, idx, profile=self.profile)
                        for r, idx in groups.items()}
         rid = np.empty(len(cluster.workers), dtype=np.intp)
         for ri, idx in enumerate(groups.values()):
@@ -335,6 +343,19 @@ class HierarchicalSynergAI(Policy):
         self._ensure(cluster)
         if len(self._views) > 1 and job.id not in self.router.home:
             self.router.route(job, cluster.phase_of(job))
+        if self.recharacterizer is not None:
+            # per-region drift windows: each region's traffic mix is
+            # tracked against its own anchor, so a mix flip confined to
+            # one region triggers without diluting into the global mix
+            region = (self.router.home.get(job.id, "")
+                      if len(self._views) > 1 else "")
+            self.recharacterizer.observe_arrival(job, cluster, now,
+                                                 region=region)
+
+    def on_complete(self, result, cluster, now):
+        if self.recharacterizer is not None:
+            self.recharacterizer.observe_complete(
+                result, cluster, now, use_default=self.use_default_config)
 
     def on_requeue(self, job: Job, cluster: Cluster, now: float):
         self._ensure(cluster)

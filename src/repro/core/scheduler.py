@@ -70,22 +70,49 @@ class SynergAI(Policy):
     name = "SynergAI"
     use_default_config = False
 
-    def __init__(self, score_fn=None, incremental: bool = True):
+    def __init__(self, score_fn=None, incremental: bool = True,
+                 recharacterizer=None):
         # score_fn: optional accelerated scorer — the Eq. 2-4 Pallas
         # kernel, or the fused v2 kernel (``fused`` attribute) which also
         # consumes the depth penalty / phase split / streaming gates.
         # incremental=False disables the cross-tick score cache (the
         # uncached reference path, e.g. for the perf bench baseline).
+        # recharacterizer: an ``OnlineRecharacterizer`` closing the
+        # offline/online loop — arrivals and completions feed its drift
+        # detector, and scoring reads its belief-scaled profile overlay
+        # (``estimator.ProfileOverlay``); inert until it triggers.
         self.score_fn = score_fn or estimate_matrix
         self._fused = bool(getattr(score_fn, "fused", False))
         self._takes_token = bool(getattr(self.score_fn, "takes_token",
                                          False))
+        self._takes_profile = bool(getattr(self.score_fn, "takes_profile",
+                                           False))
+        self.recharacterizer = recharacterizer
+        self.profile = recharacterizer.profile if recharacterizer else 0
+        if (recharacterizer is not None and score_fn is not None
+                and not (self._fused or self._takes_profile)):
+            raise ValueError(
+                "recharacterizer needs a score_fn that reads the profile "
+                "overlay: the default numpy estimator, the fused v2 "
+                "kernel, or a backend advertising takes_profile")
         # a conventional custom score_fn builds its own matrices, so the
         # row cache would be dead weight; the fused kernel reads its
         # matrices *from* the cache, so it always carries one
         self.cache: Optional[ScoreCache] = (
-            ScoreCache() if self._fused
+            ScoreCache(profile=self.profile) if self._fused
             or (incremental and score_fn is None) else None)
+
+    # -- online re-characterization hooks (inert without one) ----------
+
+    def on_arrival(self, job, cluster, now):
+        if self.recharacterizer is not None:
+            self.recharacterizer.observe_arrival(job, cluster, now)
+
+    def on_complete(self, result, cluster, now):
+        if self.recharacterizer is not None:
+            self.recharacterizer.observe_complete(
+                result, cluster, now,
+                use_default=self.use_default_config)
 
     def schedule(self, now, queue, cluster: Cluster) -> List[Assignment]:
         if not queue:
@@ -266,13 +293,13 @@ class SynergAI(Policy):
 
     def _schedule_full(self, now, queue, cluster, avail):
         workers = cluster.arrays.names
+        kw = {}
         if self._takes_token:
-            score = self.score_fn(cluster.cd, queue, workers, now,
-                                  use_default=False,
-                                  token=cluster.worker_token)
-        else:
-            score = self.score_fn(cluster.cd, queue, workers, now,
-                                  use_default=False)
+            kw["token"] = cluster.worker_token
+        if self._takes_profile and self.profile:
+            kw["profile"] = self.profile
+        score = self.score_fn(cluster.cd, queue, workers, now,
+                              use_default=False, **kw)
         t = score.t_estimated
         doomed = score.doomed
         acceptable = score.acceptable
@@ -292,7 +319,8 @@ class SynergAI(Policy):
         if disagg or streaming:
             pre_m, dec_m = phase_split_matrices(cluster.cd, queue, workers,
                                                 use_default=False,
-                                                token=cluster.worker_token)
+                                                token=cluster.worker_token,
+                                                profile=self.profile)
         if disagg:
             # phase-aware service times: a prefill-phase job costs a
             # worker only its prefill prefix, a decode-phase job only the

@@ -42,16 +42,23 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.engines import engine_catalogue
-from repro.core.estimator import phase_split_matrices, score_matrices
+from repro.core.estimator import (phase_split_matrices, profile_gen,
+                                  profile_overlay, score_matrices)
 
 _GROW = 256          # minimum slot-pool growth (amortized doubling)
 
 
 class ScoreCache:
-    def __init__(self, use_default: bool = False):
+    def __init__(self, use_default: bool = False, profile: int = 0):
         self.use_default = use_default
+        # profile overlay id (online re-characterization): rows are built
+        # from that profile's belief-scaled tables, and the overlay's
+        # generation joins the cache key below.  0 (pristine) keeps the
+        # generation pinned at 0 — historical behavior, bit-for-bit.
+        self.profile = profile
         # cache identity: (cluster serial, interned worker tuple, failure
-        # generation) — any mismatch is an invalidation event
+        # generation, profile generation) — any mismatch is an
+        # invalidation event
         self._key = None
         self._names: tuple = ()
         self._W = 0
@@ -65,6 +72,7 @@ class ScoreCache:
         self.flushes = 0
         self.col_extends = 0
         self.rows_computed = 0
+        self.profile_reclaims = 0           # slots dropped by a refresh
 
     # ------------------------------------------------------------------
     # storage
@@ -83,6 +91,7 @@ class ScoreCache:
         self._dtok = np.empty(cap)
         self._has_ttft = np.empty(cap, bool)
         self._has_tpot = np.empty(cap, bool)
+        self._eng: List[Optional[str]] = [None] * cap  # slot -> engine
 
     def _flush(self, W: int):
         if self._slot:
@@ -117,6 +126,7 @@ class ScoreCache:
         self._dtok = wider(self._dtok, new_cap)
         self._has_ttft = wider(self._has_ttft, new_cap)
         self._has_tpot = wider(self._has_tpot, new_cap)
+        self._eng = self._eng + [None] * (new_cap - old)
 
     def _reclaim(self, queue):
         """Drop slots whose jobs left the queue (placed / finished)."""
@@ -125,6 +135,18 @@ class ScoreCache:
         for jid in gone:
             self._free.append(self._slot.pop(jid))
 
+    def _reclaim_profile(self, cd, seen_gen: int):
+        """Selective profile invalidation: drop exactly the slots whose
+        engine was refreshed after ``seen_gen`` (the overlay generation
+        this cache last synced at).  Every other row is untouched — the
+        minimal-flush rule ``tests/test_recharacterize.py`` pins."""
+        touched = profile_overlay(cd, self.profile).touched
+        gone = [jid for jid, s in self._slot.items()
+                if touched.get(self._eng[s], 0) > seen_gen]
+        for jid in gone:
+            self._free.append(self._slot.pop(jid))
+        self.profile_reclaims += len(gone)
+
     # ------------------------------------------------------------------
     # synchronization
 
@@ -132,14 +154,24 @@ class ScoreCache:
         """Reconcile the cache with this tick's queue; returns the [J]
         slot indices of ``queue`` (in order) into the row pool."""
         names = cluster.arrays.names
-        key = (cluster.serial, cluster.worker_token, cluster.fail_gen)
+        key = (cluster.serial, cluster.worker_token, cluster.fail_gen,
+               profile_gen(cd, self.profile))
         if key != self._key:
             old = self._key
-            if (old is not None and old[0] == key[0] and old[2] == key[2]
+            if old is not None and old[:3] == key[:3]:
+                # same cluster, same workers, no failures: only the
+                # profile generation moved — an online re-profile.  The
+                # overlay's touched log names exactly the refreshed
+                # engines; drop only their slots (the rows of every other
+                # engine still match the tables bit-for-bit).
+                self._reclaim_profile(cd, old[3])
+            elif (old is not None and old[0] == key[0] and old[2] == key[2]
+                    and old[3] == key[3]
                     and len(names) > len(self._names)
                     and tuple(names[:len(self._names)]) == self._names):
-                # same cluster, no failures, workers appended at the end:
-                # elastic provisioning — extend the columns in place
+                # same cluster, no failures, same profile, workers
+                # appended at the end: elastic provisioning — extend the
+                # columns in place
                 self._extend_columns(cd, queue, cluster, names)
             else:
                 self._flush(len(names))
@@ -163,7 +195,8 @@ class ScoreCache:
         [n, W] full-service times (inf where infeasible) + row minima."""
         qps, pre = score_matrices(cd, jobs, list(self._names),
                                   self.use_default,
-                                  token=cluster.worker_token)
+                                  token=cluster.worker_token,
+                                  profile=self.profile)
         q = np.fromiter((float(j.queries) for j in jobs),
                         dtype=np.float64, count=len(jobs))
         with np.errstate(divide="ignore", invalid="ignore"):
@@ -190,12 +223,13 @@ class ScoreCache:
         if self._have_phase:
             pre_m, dec_m = phase_split_matrices(
                 cd, jobs, list(self._names), self.use_default,
-                token=cluster.worker_token)
+                token=cluster.worker_token, profile=self.profile)
             self._pre[dest] = pre_m
             self._dec[dest] = dec_m
         engines = engine_catalogue()
         for k, (s, j) in enumerate(zip(dest, jobs)):
             r = j.request
+            self._eng[s] = j.engine
             self._qos[s] = j.t_qos
             self._arr[s] = j.arrival
             has_ttft = r is not None and r.ttft_qos is not None
@@ -239,7 +273,8 @@ class ScoreCache:
             sl = np.array([s for s, _ in live], dtype=np.intp)
             jobs = [j for _, j in live]
             qps, pre = score_matrices(cd, jobs, new_names,
-                                      self.use_default)
+                                      self.use_default,
+                                      profile=self.profile)
             q = np.fromiter((float(j.queries) for j in jobs),
                             dtype=np.float64, count=len(jobs))
             with np.errstate(divide="ignore", invalid="ignore"):
@@ -255,7 +290,8 @@ class ScoreCache:
             self._min[sl] = np.minimum(self._min[sl], new_min)
             if self._have_phase:
                 pre_m, dec_m = phase_split_matrices(cd, jobs, new_names,
-                                                    self.use_default)
+                                                    self.use_default,
+                                                    profile=self.profile)
                 self._pre[sl, old_W:] = pre_m
                 self._dec[sl, old_W:] = dec_m
 
@@ -274,7 +310,7 @@ class ScoreCache:
         if len(queue):
             pre_m, dec_m = phase_split_matrices(
                 cd, queue, list(self._names), self.use_default,
-                token=cluster.worker_token)
+                token=cluster.worker_token, profile=self.profile)
             self._pre[slots] = pre_m
             self._dec[slots] = dec_m
 

@@ -278,6 +278,20 @@ class JobResult:
     ttft_violated: bool = False
     tpot_violated: bool = False
     prefill_worker: Optional[str] = None   # disaggregated: prefill pool
+    # solo service seconds: slowdown- and noise-scaled service time
+    # excluding batch contention, cross-region transfer and queueing —
+    # what the worker's *physics* cost, which is the observable online
+    # re-characterization fits drift from (``exec_s`` is stretched by
+    # the live batch multiplier under ``serving="batched"``, so profile
+    # drift and load contention would be confounded there).  Spans both
+    # legs of a disaggregated job.
+    service_s: float = math.nan
+    # the offline profile's prediction for the same solo service (no
+    # slowdown, no noise): what a real serving stack knows about each
+    # request from its characterization tables.  ``service_s /
+    # service_pred_s`` is therefore exactly ``slowdown * exec noise`` —
+    # the drift observable, free of service-model approximation error.
+    service_pred_s: float = math.nan
 
 
 @dataclasses.dataclass
@@ -285,6 +299,24 @@ class FailureEvent:
     worker: str
     at: float
     duration: float
+
+
+@dataclasses.dataclass
+class DegradationEvent:
+    """A worker running slower than its offline profile for a window:
+    thermal throttling, a colocated tenant, a driver regression.  The
+    worker keeps serving (unlike a ``FailureEvent``) at ``factor``x its
+    characterized service time — and *nothing tells the policies*: the
+    profiles in the ConfigDict still describe the healthy device, so
+    estimates on the degraded rows are silently wrong until an online
+    re-characterization (``repro.core.recharacterize``) corrects the
+    beliefs.  Overlapping windows on one worker compose
+    multiplicatively."""
+
+    worker: str
+    at: float
+    duration: float
+    factor: float = 3.0
 
 
 # pool roles / serving phases as small ints for the vectorized masks.
@@ -596,6 +628,15 @@ class Policy:
         inert so every flat policy is untouched."""
         pass
 
+    def on_complete(self, result: "JobResult", cluster: Cluster,
+                    now: float):
+        """A job finished: its ``JobResult`` is final (both serving
+        modes).  Online policies observe outcomes here — e.g. the
+        ``OnlineRecharacterizer``'s observed-vs-predicted service-time
+        residuals.  The default is inert so every existing policy (and
+        schedule) is untouched."""
+        pass
+
     def schedule(self, now: float, queue: List[Job], cluster: Cluster
                  ) -> List[Assignment]:
         raise NotImplementedError
@@ -610,6 +651,7 @@ class Simulator:
                  fleet: Optional[Sequence[WorkerPool]] = None,
                  tick: float = 1.0,
                  failures: Sequence[FailureEvent] = (),
+                 degradations: Sequence[DegradationEvent] = (),
                  straggler_prob: float = 0.0,
                  straggler_factor: float = 3.0,
                  speculative: bool = False,
@@ -654,6 +696,7 @@ class Simulator:
         self._handoff: list = []
         self.tick = tick
         self.failures = sorted(failures, key=lambda f: f.at)
+        self.degradations = sorted(degradations, key=lambda d: d.at)
         self.straggler_prob = straggler_prob
         self.straggler_factor = straggler_factor
         self.speculative = speculative
@@ -736,7 +779,20 @@ class Simulator:
         for f in failures:
             heapq.heappush(self._heap, (f.at, next(self._seq),
                                         _W_FAILURE, None))
-        pi = fi = 0              # cursors into pending / failures
+        # slowdown edit timeline: an onset installs its factor, the
+        # expiry removes it, and the worker's slowdown is recomputed as
+        # the product of its still-active factors (exactly 1.0 when none
+        # remain — no float residue from repeated multiply/divide)
+        deg_edits: List[tuple] = []
+        for k, d in enumerate(self.degradations):
+            deg_edits.append((d.at, k, d.worker, d.factor))
+            deg_edits.append((d.at + d.duration, k, d.worker, None))
+        deg_edits.sort(key=lambda e: (e[0], e[1]))
+        deg_active: Dict[str, Dict[int, float]] = {}
+        for t, _, _, _ in deg_edits:
+            heapq.heappush(self._heap, (t, next(self._seq),
+                                        _W_FAILURE, None))
+        pi = fi = di = 0         # cursors into pending / failures / edits
         now = 0.0
         n_total = len(pending)
 
@@ -797,6 +853,25 @@ class Simulator:
                                                        self.cluster, now)
                     if isinstance(w, BatchedWorkerSim):
                         w.on_failure(now)
+                # 2b) profile degradations: the worker keeps serving,
+                # just slower than its offline characterization says —
+                # running jobs keep their committed end times, new
+                # dispatches (and batch admissions) pay the factor
+                while di < len(deg_edits) and deg_edits[di][0] <= now + 1e-12:
+                    _t, k, wname, f = deg_edits[di]
+                    di += 1
+                    w = self.cluster.workers.get(wname)
+                    if w is None:
+                        continue
+                    act = deg_active.setdefault(wname, {})
+                    if f is None:
+                        act.pop(k, None)
+                    else:
+                        act[k] = f
+                    s = 1.0
+                    for v in act.values():
+                        s *= v
+                    w.slowdown = s
                 # 3) complete finished jobs (running is at most one record
                 # per worker in job mode and at most max_batch in batched
                 # mode, so this scan is O(W), not O(jobs))
@@ -821,6 +896,7 @@ class Simulator:
                             continue
                         self._finish_streaming(rec, fin)
                     results.append(rec)
+                    self.policy.on_complete(rec, self.cluster, now)
                 # surviving batch members speed up (fewer sharers):
                 # re-estimate their completions through the heap
                 for w in rebatch.values():
@@ -928,17 +1004,41 @@ class Simulator:
             self._apply_stream_deadlines(rec)
             self._notify_end_changed(rec.job.id, end2)
 
+    def _elastic_base(self, now: float) -> "WorkerPool":
+        """The pool to clone.  Region-tagged fleets scale the *hottest*
+        region: pick the region with the highest busy/failed fraction
+        right now, then its strongest pool — so the clone inherits the
+        pressured region's tag and joins that region's scheduling columns
+        instead of bulking up a cold one.  Untagged (or single-region)
+        fleets reduce to the historical global argmax, bit-for-bit (ties:
+        first in fleet order, exactly like ``max``)."""
+        workers = list(self.cluster.workers.values())
+        regions = {w.pool.region for w in workers}
+        if len(regions) > 1:
+            stats: Dict[str, List[float]] = {}  # region -> [busy, total]
+            for w in workers:
+                s = stats.setdefault(w.pool.region, [0.0, 0.0])
+                s[0] += float(w.busy_until > now or w.failed_until > now)
+                s[1] += 1.0
+            best_r, best_load = None, -1.0
+            for r, (busy, total) in stats.items():   # insertion order
+                load = busy / total
+                if load > best_load:
+                    best_r, best_load = r, load
+            workers = [w for w in workers if w.pool.region == best_r]
+        return max(workers, key=lambda w: w.pool.chip_flops
+                   * w.pool.n_chips).pool
+
     def _elastic(self, now: float, queue: List[Job]):
-        """Spin up a clone of the strongest pool when the queue backs up
+        """Spin up a clone of the strongest pool (of the hottest region,
+        when the fleet is region-tagged) when the queue backs up
         (provisioning delay applies); retire idle clones once pressure
         subsides.  Only clones created here are ever retired, so synthetic
         fleet members (also named ``base__k``) are left alone."""
         if (len(queue) >= self.elastic_threshold
                 and self._clones < self.elastic_max):
             self._clones += 1
-            base = max(self.cluster.workers.values(),
-                       key=lambda w: w.pool.chip_flops
-                       * w.pool.n_chips).pool
+            base = self._elastic_base(now)
             # reuse retired slot numbers (bounded by elastic_max) so the
             # estimator's per-worker-tuple row cache cycles through a small
             # set of keys instead of growing with every provision
@@ -971,12 +1071,14 @@ class Simulator:
             return
         assert w.idle(now), f"{a.worker} busy"
         queue.remove(a.job)
-        exec_s = exec_time(a.entry, a.job.queries) * w.slowdown
+        pred_s = exec_time(a.entry, a.job.queries)
+        exec_s = pred_s * w.slowdown
         if self.exec_noise:
             s = self.exec_noise
             exec_s *= float(self.rng.lognormal(-0.5 * s * s, s))
         if self.straggler_prob and self.rng.random() < self.straggler_prob:
             exec_s *= self.straggler_factor
+        solo_s = exec_s
         if a.xfer_s:
             # cross-region placement: the input ships over the REGION_XFER
             # link before service starts (deterministic — not noise-scaled)
@@ -996,6 +1098,8 @@ class Simulator:
                         exec_s, e2e, e2e > a.job.t_qos,
                         max(0.0, e2e - a.job.t_qos), overhead,
                         decision_time.get(a.job.id, 0.0))
+        rec.service_s = solo_s
+        rec.service_pred_s = pred_s
         self._job_mode_streaming(rec, a.entry, exec_s, xfer_s=a.xfer_s)
         running[a.job.id] = rec
         self._notify_end_changed(a.job.id, end)
@@ -1094,6 +1198,7 @@ class Simulator:
             track_req = Request(0, full_req.decode_tokens)
         else:
             track_req = full_req
+        pred_s = work
         # the same noise model as job-level serving, in the same op order
         # (forcing max_batch=1 reproduces job mode bit-for-bit)
         work *= w.slowdown
@@ -1106,6 +1211,7 @@ class Simulator:
         if self.straggler_prob and self.rng.random() < self.straggler_prob:
             work *= self.straggler_factor
             prefill *= self.straggler_factor
+        solo_s = work
         if a.xfer_s:
             # cross-region placement: the input ships over the REGION_XFER
             # link first.  Deterministic link time — not noise-scaled —
@@ -1158,6 +1264,10 @@ class Simulator:
             rec.excess = max(0.0, rec.e2e - a.job.t_qos)
             rec.overhead_s += now - first_attempt.get(a.job.id, now)
             rec.decision_s = decision_time.get(a.job.id, 0.0)
+            rec.service_s = (solo_s if math.isnan(rec.service_s)
+                             else rec.service_s + solo_s)
+            rec.service_pred_s = (pred_s if math.isnan(rec.service_pred_s)
+                                  else rec.service_pred_s + pred_s)
         else:
             waiting = start - a.job.arrival
             e2e = end - a.job.arrival
@@ -1166,6 +1276,8 @@ class Simulator:
                             work, e2e, e2e > a.job.t_qos,
                             max(0.0, e2e - a.job.t_qos), overhead,
                             decision_time.get(a.job.id, 0.0))
+            rec.service_s = solo_s
+            rec.service_pred_s = pred_s
             if phase == "prefill":
                 self._xfer_s[a.job.id] = kv_transfer_s(prof)
         running[a.job.id] = rec

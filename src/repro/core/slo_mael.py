@@ -34,17 +34,33 @@ from repro.core.simulator import PHASE_CODE, Assignment, Cluster, Policy
 class SloMael(Policy):
     name = "SLO-MAEL"
 
-    def __init__(self):
+    def __init__(self, recharacterizer=None):
         self.backlog: Dict[str, float] = {}      # committed busy time
         self.mapping: Dict[int, str] = {}        # job id -> worker
         self.worker_fifo: Dict[str, List[int]] = {}
+        # optional online re-characterization: the arrival plan reads the
+        # overlay's belief-scaled default-config rows once it triggers
+        self.recharacterizer = recharacterizer
+        self.profile = recharacterizer.profile if recharacterizer else 0
+
+    def on_complete(self, result, cluster, now):
+        if self.recharacterizer is not None:
+            self.recharacterizer.observe_complete(
+                result, cluster, now,
+                use_default=self.use_default_config)
 
     def on_arrival(self, job, cluster: Cluster, now: float):
+        if self.recharacterizer is not None:
+            self.recharacterizer.observe_arrival(job, cluster, now)
+        self._plan(job, cluster, now)
+
+    def _plan(self, job, cluster: Cluster, now: float):
         a = cluster.arrays
         names = a.names
         qps, pre, frac = engine_rows(cluster.cd, job.engine, names,
                                      use_default=True,
-                                     token=cluster.worker_token)
+                                     token=cluster.worker_token,
+                                     profile=self.profile)
         phase = cluster.phase_of(job)
         q = float(job.queries)
         with np.errstate(divide="ignore", invalid="ignore"):
@@ -121,7 +137,10 @@ class SloMael(Policy):
             committed.update(fifo)
         for job in queue:
             if job.id not in committed:
-                self.on_arrival(job, cluster, now)
+                # re-commit without re-observing: a failure requeue is
+                # not a new arrival, so the drift detector's mix window
+                # never double-counts it
+                self._plan(job, cluster, now)
         out = []
         by_id = {j.id: j for j in queue}
         for w, fifo in self.worker_fifo.items():

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -48,7 +49,7 @@ from repro.core.configdict import ConfigDict
 from repro.core.engines import default_engines
 from repro.core.job import (DEFAULT_QUERIES, Job, Request, exec_time,
                             qos_threshold, streaming_threshold)
-from repro.core.simulator import FailureEvent
+from repro.core.simulator import DegradationEvent, FailureEvent
 from repro.core.workers import WorkerPool
 
 
@@ -803,6 +804,131 @@ def replay(trace) -> List[Job]:
 
 
 # ---------------------------------------------------------------------------
+# external serving-log import (Azure LLM inference trace format)
+
+
+def _azure_timestamp(raw: str, path, lineno: int) -> float:
+    """Seconds from an Azure trace TIMESTAMP cell: either a plain float
+    (relative seconds) or an ISO datetime — Azure publishes 7-digit
+    fractional seconds, which ``fromisoformat`` rejects, so the fraction
+    is truncated to microseconds first."""
+    s = raw.strip()
+    try:
+        return float(s)
+    except ValueError:
+        pass
+    import datetime
+    m = s.replace("T", " ")
+    if "." in m:
+        head, frac = m.split(".", 1)
+        frac = "".join(c for c in frac if c.isdigit())[:6]
+        m = f"{head}.{frac or 0}"
+    try:
+        return datetime.datetime.fromisoformat(m).timestamp()
+    except ValueError:
+        raise _trace_error(path, lineno, f"bad TIMESTAMP {raw!r} "
+                           "(want seconds or ISO datetime)") from None
+
+
+def load_azure_llm_trace(cd: ConfigDict, path, engines=None,
+                         qos_scale: float = 1.0,
+                         qos_percentile: float = 50.0,
+                         max_jobs: Optional[int] = None,
+                         tenant: str = "azure") -> List[Job]:
+    """Import an Azure-LLM-inference-style serving log as a job list.
+
+    The public Azure trace is a CSV with (at least) ``TIMESTAMP``,
+    ``ContextTokens`` and ``GeneratedTokens`` columns — request arrival
+    plus prompt/generation token counts, with no engine or QoS columns.
+    Each row becomes a ``Job``:
+
+    - **engine**: the catalogue engine whose request *shape* best
+      matches the row — minimize ``|log((ctx / prefill_len) /
+      (gen / decode_len))|`` over ``engines`` — so prompt-heavy rows
+      land on prompt-heavy engine shapes and the per-engine mix follows
+      the trace instead of a synthetic sampler.
+    - **queries**: the geometric mean of the prefill- and decode-implied
+      query counts, ``max(1, round(sqrt(q_p * q_d)))``.
+    - **request**: the row's exact token counts (the batched serving
+      bridge uses them verbatim).
+    - **t_qos**: ``qos_scale * qos_threshold(...)`` at
+      ``qos_percentile`` — the same construction every synthetic
+      scenario uses.
+    - **arrival**: normalized so the first row arrives at ``t = 0``.
+
+    Returns arrival-sorted jobs with sequential ids, ready for
+    ``Simulator.run`` — and for ``save_trace``, which round-trips them
+    bit-for-bit into the native replay format.  Malformed input (missing
+    header columns, non-numeric or non-positive token counts, a bad
+    timestamp) raises ``ValueError`` naming ``path:line``.
+    """
+    specs = dict(engines or default_engines())
+    if not specs:
+        raise ValueError("load_azure_llm_trace: empty engine catalogue")
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        raise _trace_error(path, 1, "empty file, expected a CSV header "
+                           "with TIMESTAMP, ContextTokens, "
+                           "GeneratedTokens")
+    header = [c.strip().lower() for c in lines[0].split(",")]
+    cols = {}
+    for want in ("timestamp", "contexttokens", "generatedtokens"):
+        if want not in header:
+            raise _trace_error(path, 1, f"missing column {want!r} "
+                               f"(header has {lines[0]!r})")
+        cols[want] = header.index(want)
+    shapes = sorted((name, spec.prefill_len, spec.decode_len)
+                    for name, spec in specs.items())
+    rows = []
+    for lineno, line in enumerate(lines[1:], 2):
+        if not line.strip():
+            continue
+        cells = line.split(",")
+        if len(cells) < len(header):
+            raise _trace_error(path, lineno, f"row has {len(cells)} "
+                               f"cells, header has {len(header)}")
+        at = _azure_timestamp(cells[cols["timestamp"]], path, lineno)
+        try:
+            ctx = int(float(cells[cols["contexttokens"]]))
+            gen = int(float(cells[cols["generatedtokens"]]))
+        except ValueError:
+            raise _trace_error(path, lineno, "non-numeric token count "
+                               f"{line!r}") from None
+        if ctx <= 0 or gen <= 0:
+            raise _trace_error(path, lineno, f"non-positive token "
+                               f"count (ctx={ctx}, gen={gen})")
+        rows.append((at, ctx, gen))
+        if max_jobs is not None and len(rows) >= max_jobs:
+            break
+    if not rows:
+        raise _trace_error(path, 2, "trace has a header but no rows")
+    t0 = min(at for at, _c, _g in rows)
+    jobs: List[Job] = []
+    for at, ctx, gen in rows:
+        best = None
+        for name, plen, dlen in shapes:
+            mismatch = abs(math.log((ctx / plen) / (gen / dlen)))
+            if best is None or mismatch < best[0] - 1e-12:
+                best = (mismatch, [(name, plen, dlen)])
+            elif mismatch < best[0] + 1e-12:
+                best[1].append((name, plen, dlen))
+        # engines sharing a request shape tie; spread them by a
+        # deterministic token-count hash instead of collapsing the whole
+        # trace onto the alphabetically first name
+        tied = best[1]
+        engine, plen, dlen = tied[(ctx * 31 + gen) % len(tied)]
+        q = max(1, round(math.sqrt((ctx / plen) * (gen / dlen))))
+        t_qos = qos_scale * qos_threshold(cd, engine, q, qos_percentile)
+        jobs.append(Job(0, engine, q, float(t_qos), at - t0,
+                        request=Request(ctx, gen), tenant=tenant))
+    jobs.sort(key=lambda j: j.arrival)
+    for i, j in enumerate(jobs):
+        j.id = i
+    return jobs
+
+
+# ---------------------------------------------------------------------------
 # failure traces
 
 
@@ -895,3 +1021,44 @@ def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
                 events.append(FailureEvent(pools[i], float(t), float(d)))
             t += d + rng.exponential(mtbf_s)
     return sorted(events, key=lambda f: f.at)
+
+
+def synth_degradations(fleet: Sequence[WorkerPool], horizon_s: float,
+                       onset_s: Optional[float] = None,
+                       duration_s: Optional[float] = None,
+                       factor: float = 3.0, fraction: float = 0.35,
+                       prefix: Optional[str] = None,
+                       seed: int = 0) -> List[DegradationEvent]:
+    """Synthetic *profile-drift* traces: a share of the fleet starts
+    running slower than its offline characterization (thermal
+    throttling, colocated tenants, a driver regression) while the
+    ConfigDict keeps describing the healthy device — the scenario
+    ``repro.core.recharacterize`` exists for.
+
+    ``fraction`` of the pools (optionally restricted to names starting
+    with ``prefix``, e.g. ``"edge"`` for the battery/thermal-limited
+    tier) each get one ``DegradationEvent``: onset jittered uniformly in
+    ``[onset_s, 1.25 * onset_s]`` (default ``horizon_s / 3`` — the
+    detector's anchor windows see the healthy regime first), duration
+    ``duration_s`` (default: through the end of the trace), slowdown
+    jittered uniformly in ``[0.8, 1.2] * factor``."""
+    if factor <= 0:
+        raise ValueError(f"factor must be > 0, got {factor}")
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+    names = [w.name for w in fleet
+             if prefix is None or w.name.startswith(prefix)]
+    if not names:
+        raise ValueError(f"no pool name starts with {prefix!r}")
+    rng = np.random.default_rng(seed)
+    onset_s = horizon_s / 3.0 if onset_s is None else float(onset_s)
+    n = max(1, int(round(fraction * len(names))))
+    picks = rng.choice(len(names), size=n, replace=False)
+    events = []
+    for i in sorted(picks):
+        at = float(onset_s * rng.uniform(1.0, 1.25))
+        dur = (float(duration_s) if duration_s is not None
+               else max(0.0, horizon_s - at) + horizon_s)
+        f = float(factor * rng.uniform(0.8, 1.2))
+        events.append(DegradationEvent(names[i], at, dur, f))
+    return sorted(events, key=lambda d: d.at)

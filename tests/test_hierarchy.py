@@ -334,6 +334,76 @@ def test_regional_scenario_merges_and_reindexes(configdict):
 
 
 # ----------------------------------------------------------------------------
+# region-aware elastic provisioning
+
+
+def test_elastic_base_picks_hottest_region(configdict):
+    """The pool elastic provisioning clones comes from the region with
+    the highest busy/failed fraction, so the clone inherits the
+    pressured region's tag instead of bulking up a cold one."""
+    fleet = synth_fleet(1, 2, 2, regions=2)
+    by_region = {}
+    for w in fleet:
+        by_region.setdefault(w.region, []).append(w.name)
+    assert len(by_region) == 2
+    hot, cold = sorted(by_region)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet)
+    for name in by_region[hot]:
+        sim.cluster.workers[name].busy_until = 100.0
+    base = sim._elastic_base(now=10.0)
+    assert base.region == hot
+    # flip the pressure: the other region wins
+    for name in by_region[hot]:
+        sim.cluster.workers[name].busy_until = 0.0
+    for name in by_region[cold]:
+        sim.cluster.workers[name].failed_until = 100.0
+    assert sim._elastic_base(now=10.0).region == cold
+
+
+class _CloneRegionProbe(HierarchicalSynergAI):
+    """Records every live clone's region tag at each scheduling tick
+    (clones retire once pressure subsides, so post-run state is empty)."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.seen = {}
+
+    def schedule(self, now, queue, cluster):
+        for name, ws in cluster.workers.items():
+            if "__clone" in name:
+                self.seen[name] = ws.pool.region
+        return super().schedule(now, queue, cluster)
+
+
+def test_elastic_clones_inherit_parent_region(configdict):
+    """Every clone provisioned during a region-tagged overload run
+    carries its base pool's region tag and joins that region's
+    scheduling columns (regression: clones used to be untagged)."""
+    fleet = synth_fleet(1, 2, 2, regions=2)
+    regions = {w.region for w in fleet}
+    base_region = {w.name: w.region for w in fleet}
+    jobs = regional_scenario(configdict, "flash", n_jobs=250,
+                             fleet=fleet, seed=3, utilization=2.5)
+    pol = _CloneRegionProbe()
+    Simulator(configdict, pol, fleet=fleet, seed=3,
+              elastic_max=3, elastic_threshold=4).run(jobs)
+    assert pol.seen                         # the overload actually scaled
+    for name, region in pol.seen.items():
+        parent = name.rsplit("__clone", 1)[0]
+        assert region == base_region[parent]
+        assert region in regions
+
+
+def test_elastic_base_untagged_matches_single_region(configdict):
+    """Untagged fleets reduce to the historical global argmax."""
+    tagged = synth_fleet(1, 2, 2, regions=1)
+    plain = synth_fleet(1, 2, 2)
+    a = Simulator(configdict, SynergAI(), fleet=tagged)
+    b = Simulator(configdict, SynergAI(), fleet=plain)
+    assert a._elastic_base(0.0).name == b._elastic_base(0.0).name
+
+
+# ----------------------------------------------------------------------------
 # bench smoke
 
 

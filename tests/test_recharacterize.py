@@ -1,0 +1,504 @@
+"""Online re-characterization: drift detection + estimator refresh.
+
+The drift-recovery test tier the PR's acceptance anchors name:
+
+- **Quiet detector** — with an ``OnlineRecharacterizer`` attached, every
+  non-drift schedule is bit-for-bit what it is without one: deterministic
+  scenario combos across both serving modes and all three policy shapes
+  (flat ``SynergAI``, ``HierarchicalSynergAI``, ``SloMael``), plus the
+  PR2/replay golden digests reproduced with the detector *enabled*.
+- **Recovery** — under ``synth_degradations`` (unmodeled pool slowdowns)
+  the online loop cuts QoS violations strictly below the stale-profile
+  run and lands within a pinned factor of the true-factor oracle.
+- **Mechanics** — ``DegradationEvent`` slowdown composition and exact
+  restore, the ``service_s / service_pred_s`` observable, minimal
+  profile-generation cache flush (exactly the refreshed engines' rows),
+  and cached == uncached through refresh/failure/elastic interleavings.
+- Hypothesis properties behind the conftest shim with seeded fallbacks.
+"""
+
+import functools
+import hashlib
+import math
+
+import numpy as np
+import pytest
+from conftest import given, settings, st
+from test_streaming_qos import PR2_GOLDEN
+from test_trace_replay import REPLAY_GOLDEN_DIGEST
+
+from repro.core.engines import engine_catalogue
+from repro.core.estimator import profile_gen, profile_overlay
+from repro.core.hierarchy import HierarchicalSynergAI
+from repro.core.offline import characterize
+from repro.core.recharacterize import (OnlineRecharacterizer, _MixWindow,
+                                       _ResidWindow)
+from repro.core.scheduler import SynergAI
+from repro.core.scorecache import ScoreCache
+from repro.core.simulator import DegradationEvent, Simulator
+from repro.core.slo_mael import SloMael
+from repro.core.workers import synth_fleet
+from repro.core.workload import (replay, save_trace, scenario,
+                                 synth_degradations, synth_failures)
+
+
+@functools.lru_cache(maxsize=None)
+def _cd():
+    return characterize()
+
+
+def _result_key(results):
+    return [(r.job.id, r.worker, r.config, r.start, r.end, r.waiting,
+             r.exec_s, r.e2e, r.violated, r.excess, r.ttft, r.tpot)
+            for r in results]
+
+
+def _violations(results):
+    return sum(1 for r in results if r.violated)
+
+
+# ----------------------------------------------------------------------------
+# quiet detector: enabled on non-drift traffic == no recharacterizer,
+# bit-for-bit, across serving modes and policy shapes
+
+def _check_quiet(kind, serving, make_policy, seed=3, n_jobs=260,
+                 utilization=1.2, regions=None):
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2, regions=regions)
+    jobs = scenario(cd, kind, n_jobs=n_jobs, fleet=fleet, seed=seed,
+                    utilization=utilization, serving=serving)
+    kw = dict(fleet=fleet, seed=seed, serving=serving)
+    base = _result_key(Simulator(cd, make_policy(None), **kw).run(jobs))
+    rc = OnlineRecharacterizer()
+    withrc = _result_key(Simulator(cd, make_policy(rc), **kw).run(jobs))
+    assert withrc == base
+    assert rc.refreshes == 0, rc.last_reason
+    return rc
+
+
+@pytest.mark.parametrize("kind,serving,policy", [
+    ("mmpp", "job", "synergai"),
+    ("mmpp", "batched", "synergai"),
+    ("flash", "job", "hier"),
+    ("multi-tenant", "batched", "hier"),
+    ("poisson", "job", "slomael"),
+    ("diurnal", "batched", "slomael"),
+])
+def test_quiet_detector_bit_for_bit(kind, serving, policy):
+    make = {
+        "synergai": lambda rc: SynergAI(recharacterizer=rc),
+        "hier": lambda rc: HierarchicalSynergAI(recharacterizer=rc),
+        "slomael": lambda rc: SloMael(recharacterizer=rc),
+    }[policy]
+    _check_quiet(kind, serving, make,
+                 regions=2 if policy == "hier" else None)
+
+
+def test_detect_false_is_inert():
+    rc = _check_quiet("mmpp", "job",
+                      lambda rc: SynergAI(
+                          recharacterizer=rc or
+                          OnlineRecharacterizer(detect=False)))
+    assert rc.refreshes == 0
+
+
+def test_golden_digest_replayed_mmpp_with_detector_enabled(configdict,
+                                                           tmp_path):
+    """The PR4 replay golden digest, reproduced with the online loop
+    *enabled*: 40 jobs never fill a detector window, and even the live
+    observation hooks must not perturb one bit of the schedule."""
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=40, fleet=fleet, seed=7,
+                    utilization=1.2)
+    path = tmp_path / "golden.jsonl"
+    save_trace(path, jobs)
+    rc = OnlineRecharacterizer()
+    res = Simulator(configdict, SynergAI(recharacterizer=rc), fleet=fleet,
+                    seed=7).run(replay(str(path)))
+    canon = "\n".join(
+        f"{r.job.id},{r.worker},{r.config},{r.start!r},{r.end!r},"
+        f"{r.ttft!r},{r.tpot!r},{int(r.violated)}"
+        for r in sorted(res, key=lambda r: r.job.id))
+    assert hashlib.sha256(canon.encode()).hexdigest() == \
+        REPLAY_GOLDEN_DIGEST
+    assert rc.refreshes == 0
+
+
+@pytest.mark.parametrize("policy", ["flat", "hier"])
+def test_pr2_golden_with_detector_enabled(configdict, policy):
+    """The PR2 batched golden values survive an enabled detector, flat
+    and through the hierarchical wrapper."""
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=40, fleet=fleet, seed=7,
+                    utilization=1.2, serving="batched")
+    rc = OnlineRecharacterizer()
+    pol = (SynergAI(recharacterizer=rc) if policy == "flat"
+           else HierarchicalSynergAI(recharacterizer=rc))
+    res = {r.job.id: r for r in
+           Simulator(configdict, pol, fleet=fleet, seed=7,
+                     serving="batched").run(jobs)}
+    for jid, worker, start, end, exec_s, violated in PR2_GOLDEN:
+        r = res[jid]
+        assert r.worker == worker
+        assert r.start == pytest.approx(start, rel=1e-9)
+        assert r.end == pytest.approx(end, rel=1e-9)
+        assert r.exec_s == pytest.approx(exec_s, rel=1e-9)
+        assert r.violated == violated
+    assert rc.refreshes == 0
+
+
+# ----------------------------------------------------------------------------
+# recovery: stale profile vs the online loop vs the oracle
+
+def _drift_setup(cd, n_jobs=2500, factor=5.0):
+    fleet = synth_fleet(2, 5, 5, regions=3)
+    jobs = scenario(cd, "drift", n_jobs=n_jobs, fleet=fleet,
+                    utilization=0.6, seed=0)
+    degs = synth_degradations(fleet, jobs[-1].arrival, factor=factor,
+                              fraction=0.35, prefix="edge", seed=0)
+    return fleet, jobs, degs
+
+
+def test_drift_recovery_online_beats_stale(configdict):
+    """An unmodeled 5x slowdown on a third of the edge tier: the online
+    loop must at least halve the stale profile's violations and land
+    within a pinned factor of the true-factor oracle."""
+    cd = configdict
+    fleet, jobs, degs = _drift_setup(cd)
+    truth = {d.worker: d.factor for d in degs}
+
+    def run(rc):
+        return Simulator(cd, SynergAI(recharacterizer=rc),
+                         fleet=list(fleet), degradations=degs,
+                         seed=0).run(list(jobs))
+
+    stale = _violations(run(None))
+    rc = OnlineRecharacterizer()
+    online = _violations(run(rc))
+    oracle_rc = OnlineRecharacterizer(detect=False)
+    from repro.core.simulator import Cluster
+    oracle_rc.seed(Cluster(cd, list(fleet)), worker_factors=truth)
+    oracle = _violations(run(oracle_rc))
+
+    assert rc.refreshes >= 1
+    assert online < stale                      # strictly better
+    assert online <= stale / 2                 # at least halved
+    assert oracle <= online                    # oracle is the floor
+    assert online <= 8 * max(1, oracle)        # pinned factor of oracle
+    # the refresh installed beliefs in the slow direction on degraded
+    # pools (scale < 1 means "believed slower than the profile")
+    ov = profile_overlay(cd, rc.profile)
+    names = tuple(w.name for w in fleet)
+    slowed = [w for w in truth if w in names]
+    assert slowed
+    believed = np.ones(len(names))
+    for e in ov.scale:
+        believed = np.minimum(believed, ov.factors(e, names))
+    for w in slowed:
+        assert believed[names.index(w)] < 1.0, w
+
+
+def test_drift_recovery_batched_serving(configdict):
+    """The residual observable is batch-contention-free, so the loop
+    also recovers under batched serving (looser bar: strictly fewer
+    violations than the stale profile)."""
+    cd = configdict
+    fleet, jobs, degs = _drift_setup(cd, n_jobs=1200)
+    jobs = scenario(cd, "drift", n_jobs=1200, fleet=fleet,
+                    utilization=0.6, seed=0, serving="batched")
+    degs = synth_degradations(fleet, jobs[-1].arrival, factor=5.0,
+                              fraction=0.35, prefix="edge", seed=0)
+
+    def run(rc):
+        return Simulator(cd, SynergAI(recharacterizer=rc),
+                         fleet=list(fleet), degradations=degs, seed=0,
+                         serving="batched").run(list(jobs))
+
+    stale = _violations(run(None))
+    rc = OnlineRecharacterizer()
+    online = _violations(run(rc))
+    assert rc.refreshes >= 1
+    assert online < stale
+
+
+def test_seed_oracle_installs_inverse_factors(configdict):
+    from repro.core.simulator import Cluster
+    fleet = synth_fleet(1, 2, 2)
+    cluster = Cluster(configdict, fleet)
+    rc = OnlineRecharacterizer(detect=False)
+    rc.seed(cluster, worker_factors={fleet[0].name: 4.0},
+            engine_factors={"gemma-2b/bf16": 2.0})
+    assert rc.refreshes == 1 and rc.last_reason == "seed"
+    ov = profile_overlay(configdict, rc.profile)
+    names = tuple(w.name for w in fleet)
+    f = ov.factors("gemma-2b/bf16", names)
+    assert f[0] == pytest.approx(1.0 / 8.0)    # worker 4x * engine 2x
+    assert f[1] == pytest.approx(1.0 / 2.0)    # engine factor alone
+    g = ov.factors("qwen3-4b/bf16", names)
+    assert g[0] == pytest.approx(1.0 / 4.0)
+    assert g[1] == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------------------------
+# DegradationEvent mechanics
+
+def test_degradation_scales_solo_service_exactly(configdict):
+    """With exec noise off, a whole-run degradation makes every job's
+    solo service seconds exactly ``factor *`` the profile model's own
+    prediction — the clean form of the drift observable."""
+    fleet = synth_fleet(1, 0, 0)
+    jobs = scenario(configdict, "poisson", n_jobs=20, fleet=fleet,
+                    seed=2, utilization=0.5)
+    span = jobs[-1].arrival + 1e6
+    deg = [DegradationEvent(fleet[0].name, 0.0, span, factor=3.0)]
+    healthy = Simulator(configdict, SynergAI(), fleet=fleet, seed=2,
+                        exec_noise=0.0).run(list(jobs))
+    for r in healthy:
+        assert r.service_s == pytest.approx(r.service_pred_s, rel=1e-12)
+    slow = Simulator(configdict, SynergAI(), fleet=fleet, seed=2,
+                     exec_noise=0.0, degradations=deg).run(list(jobs))
+    for r in slow:
+        assert r.service_s == pytest.approx(3.0 * r.service_pred_s,
+                                            rel=1e-12)
+
+
+class _SlowdownProbe(SynergAI):
+    name = "SlowdownProbe"
+
+    def __init__(self, worker, **kw):
+        super().__init__(**kw)
+        self.worker = worker
+        self.seen = []
+
+    def schedule(self, now, queue, cluster):
+        ws = cluster.workers.get(self.worker)
+        if ws is not None:
+            self.seen.append((now, ws.slowdown))
+        return super().schedule(now, queue, cluster)
+
+
+def test_overlapping_degradations_compose_and_restore(configdict):
+    """Two overlapping windows compose multiplicatively and expire to an
+    exact 1.0 (no float residue)."""
+    fleet = synth_fleet(1, 1, 1)
+    w = fleet[0].name
+    jobs = scenario(configdict, "poisson", n_jobs=120, fleet=fleet,
+                    seed=4, utilization=0.8)
+    span = jobs[-1].arrival
+    degs = [DegradationEvent(w, span * 0.2, span * 0.4, factor=2.0),
+            DegradationEvent(w, span * 0.4, span * 0.1, factor=3.0)]
+    probe = _SlowdownProbe(w)
+    Simulator(configdict, probe, fleet=fleet, seed=4,
+              degradations=degs).run(jobs)
+    levels = {s for _, s in probe.seen}
+    assert 6.0 in levels                       # overlap: 2 * 3
+    assert 2.0 in levels                       # first window alone
+    final = [s for t, s in probe.seen if t > span * 0.7]
+    assert final and all(s == 1.0 for s in final)   # exact restore
+
+
+def test_synth_degradations_validation_and_shape():
+    fleet = synth_fleet(2, 2, 2)
+    with pytest.raises(ValueError):
+        synth_degradations(fleet, 100.0, factor=0.0)
+    with pytest.raises(ValueError):
+        synth_degradations(fleet, 100.0, fraction=0.0)
+    with pytest.raises(ValueError):
+        synth_degradations(fleet, 100.0, prefix="nope")
+    degs = synth_degradations(fleet, 900.0, factor=3.0, fraction=1.0,
+                              prefix="edge", seed=1)
+    assert degs and all(d.worker.startswith("edge") for d in degs)
+    assert all(d.at >= 300.0 for d in degs)    # anchor window first
+    assert all(2.4 <= d.factor <= 3.6 for d in degs)
+    assert degs == sorted(degs, key=lambda d: d.at)
+
+
+def test_service_residual_observable_is_noise_only(configdict):
+    """log(service_s / service_pred_s) on a healthy fleet is exactly
+    the exec-noise distribution (mean -sigma^2/2, sigma=0.2) in *both*
+    serving modes — the property that keeps the detector quiet under
+    batching, load swings and transfers."""
+    fleet = synth_fleet(1, 2, 2)
+    for serving in ("job", "batched"):
+        jobs = scenario(configdict, "mmpp", n_jobs=300, fleet=fleet,
+                        seed=5, utilization=1.2, serving=serving)
+        res = Simulator(configdict, SynergAI(), fleet=fleet, seed=5,
+                        serving=serving).run(jobs)
+        lr = np.array([math.log(r.service_s / r.service_pred_s)
+                       for r in res
+                       if not math.isnan(r.service_s)
+                       and (r.prefill_worker is None
+                            or r.prefill_worker == r.worker)])
+        assert len(lr) >= 250
+        assert abs(lr.mean() + 0.02) < 0.05, serving
+        assert abs(lr.std() - 0.2) < 0.06, serving
+
+
+# ----------------------------------------------------------------------------
+# profile generation: minimal flush
+
+def test_profile_gen_flushes_exactly_refreshed_engines(configdict):
+    """An overlay refresh reclaims exactly the refreshed engines' cached
+    rows; every other job's slot survives untouched."""
+    from repro.core.simulator import Cluster
+    fleet = synth_fleet(1, 2, 2)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet)
+    cluster = sim.cluster
+    jobs = scenario(configdict, "poisson", n_jobs=60, fleet=fleet,
+                    seed=6)
+    engines = {j.engine for j in jobs}
+    assert len(engines) >= 2
+    rc = OnlineRecharacterizer()
+    cache = ScoreCache(profile=rc.profile)
+    cache.sync(configdict, jobs, cluster)
+    slots_before = dict(cache._slot)
+    gen0 = profile_gen(configdict, rc.profile)
+    target = sorted(engines)[0]
+    profile_overlay(configdict, rc.profile).apply(
+        {target: {fleet[0].name: 0.5}})
+    assert profile_gen(configdict, rc.profile) == gen0 + 1
+    cache.sync(configdict, jobs, cluster)
+    touched = [j for j in jobs if j.engine == target]
+    assert cache.profile_reclaims == len(touched)
+    for j in jobs:
+        if j.engine != target:
+            assert cache._slot[j.id] == slots_before[j.id]
+
+
+def test_pristine_profile_gen_is_pinned_zero(configdict):
+    assert profile_gen(configdict, 0) == 0
+    rc = OnlineRecharacterizer()
+    assert profile_gen(configdict, rc.profile) == 0   # never refreshed
+    assert rc.profile != 0
+
+
+# ----------------------------------------------------------------------------
+# cached == uncached through refresh / failure / elastic interleavings
+
+def _check_cached_equals_uncached_with_rc(seed, kind, utilization,
+                                          serving, failures=False,
+                                          elastic=0, factor=4.0):
+    cd = _cd()
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(cd, kind, n_jobs=400, fleet=fleet, seed=seed,
+                    utilization=utilization, serving=serving)
+    span = jobs[-1].arrival
+    kw = dict(fleet=fleet, seed=seed, serving=serving,
+              degradations=synth_degradations(fleet, span, factor=factor,
+                                              fraction=0.5, seed=seed))
+    if failures:
+        kw["failures"] = synth_failures(fleet, span, mtbf_s=span / 2,
+                                        mttr_s=60.0, seed=seed)
+    if elastic:
+        kw.update(elastic_max=elastic, elastic_threshold=4)
+    rc_a, rc_b = OnlineRecharacterizer(), OnlineRecharacterizer()
+    a = _result_key(Simulator(cd, SynergAI(recharacterizer=rc_a),
+                              **kw).run(list(jobs)))
+    b = _result_key(Simulator(
+        cd, SynergAI(recharacterizer=rc_b, incremental=False),
+        **kw).run(list(jobs)))
+    assert a == b
+    assert rc_a.refreshes == rc_b.refreshes
+    return rc_a
+
+
+def test_cached_equals_uncached_through_refresh():
+    rc = _check_cached_equals_uncached_with_rc(0, "mmpp", 0.7, "job")
+    assert rc.refreshes >= 1        # the interleaving actually refreshed
+
+
+def test_cached_equals_uncached_refresh_failures_elastic():
+    _check_cached_equals_uncached_with_rc(1, "mmpp", 0.9, "job",
+                                          failures=True)
+    _check_cached_equals_uncached_with_rc(2, "flash", 1.1, "job",
+                                          elastic=2)
+    _check_cached_equals_uncached_with_rc(3, "poisson", 0.8, "batched")
+
+
+# ----------------------------------------------------------------------------
+# hypothesis properties (conftest shim: skip cleanly without hypothesis)
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kind=st.sampled_from(["poisson", "mmpp", "multi-tenant"]),
+       serving=st.sampled_from(["job", "batched"]))
+def test_no_drift_never_triggers_property(seed, kind, serving):
+    """Stationary traffic on a healthy fleet never triggers a refresh,
+    and the enabled detector leaves the schedule bit-for-bit."""
+    _check_quiet(kind, serving,
+                 lambda rc: SynergAI(recharacterizer=rc), seed=seed,
+                 n_jobs=220, utilization=1.0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       utilization=st.floats(0.6, 1.2),
+       factor=st.floats(2.5, 6.0))
+def test_cached_equals_uncached_with_refresh_property(seed, utilization,
+                                                      factor):
+    """Incremental and uncached SynergAI stay identical through any
+    drift + refresh interleaving hypothesis finds."""
+    _check_cached_equals_uncached_with_rc(seed, "mmpp", utilization,
+                                          "job", factor=factor)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_mix_window_anchored_tv_property(data):
+    """The mix window never fires while the mix matches its anchor and
+    always fires after ``confirm`` windows of a disjoint mix."""
+    engines = sorted(engine_catalogue())[:4]
+    window, confirm = 32, 2
+    mw = _MixWindow(window, 0.3, confirm)
+    steady = data.draw(st.lists(st.sampled_from(engines[:2]),
+                                min_size=window, max_size=window))
+    for _ in range(3):                      # anchor + 2 matching windows
+        assert not any(mw.add(e) for e in steady)
+    fired = []
+    for _ in range(confirm + 1):            # disjoint mix: TV = 1.0
+        for e in data.draw(st.lists(st.sampled_from(engines[2:]),
+                                    min_size=window, max_size=window)):
+            fired.append(mw.add(e))
+    assert any(fired)
+    mw.reset()
+    assert mw.anchor is None and mw.streak == 0
+
+
+def test_resid_window_fires_on_shift_not_on_noise():
+    """Seeded fallback for the detector internals: stationary lognormal
+    noise never fires; a sustained 3x one-worker shift does."""
+    rng = np.random.default_rng(0)
+    rw = _ResidWindow(window=64, threshold=0.35)
+    workers = [f"w{i}" for i in range(4)]
+    fired = False
+    for i in range(64 * 4):
+        fired = fired or rw.add("e0", workers[i % 4],
+                                float(rng.normal(-0.02, 0.2)))
+    assert not fired
+    for i in range(64):
+        w = workers[i % 4]
+        shift = math.log(3.0) if w == "w0" else 0.0
+        if rw.add("e0", w, float(rng.normal(-0.02 + shift, 0.2))):
+            fired = True
+            break
+    assert fired
+
+
+def test_refit_gates_noise_to_zero_updates(configdict):
+    """A trigger with no real physics deviation re-fits to zero updates
+    (the schedule-preserving rule for mix-triggered refreshes)."""
+    from repro.core.simulator import Cluster
+    rng = np.random.default_rng(1)
+    fleet = synth_fleet(1, 1, 1)
+    cluster = Cluster(configdict, fleet)
+    rc = OnlineRecharacterizer()
+    names = [w.name for w in fleet]
+    for i in range(rc.window):              # anchor window: pure noise
+        rc._resid.add("gemma-2b/bf16", names[i % len(names)],
+                      float(rng.normal(-0.02, 0.2)))
+    for i in range(rc.window):              # second window: still noise
+        rc._resid.add("gemma-2b/bf16", names[i % len(names)],
+                      float(rng.normal(-0.02, 0.2)))
+    assert rc._refit(cluster) == {}
+    rc.refresh(cluster, now=123.0)
+    assert rc.refreshes == 0 and rc.triggered_at == []

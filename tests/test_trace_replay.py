@@ -181,3 +181,135 @@ def test_bench_traces_sections_and_replay_exactness(configdict):
             s = out[(section, P.name)]
             assert s["jobs"] == 250
             assert math.isfinite(s["e2e_p99_s"])
+    for name in ("stale", "online", "oracle"):
+        s = out[("drift+recharacterize", name)]
+        assert s["jobs"] == 250
+        assert math.isfinite(s["e2e_p99_s"])
+
+
+def test_bench_drift_recovery_smoke_schema(configdict):
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from scheduler_experiments import bench_drift_recovery
+    blob = bench_drift_recovery(configdict, smoke=True,
+                                emit=lambda *_: None)
+    assert blob["schema"] == 1
+    variants = [c["variant"] for c in blob["configs"]]
+    assert variants == ["drift-stale", "drift-online", "drift-oracle"]
+    for c in blob["configs"]:
+        assert c["violations"] >= 0 and c["wall_s"] > 0
+    online = blob["configs"][1]
+    assert "violation_ratio_stale_vs_online" in online
+    assert "drift_headline" not in blob        # smoke: no gating blob
+
+
+# ----------------------------------------------------------------------------
+# Azure-LLM-trace import adapter
+
+
+AZURE_ROWS = [
+    ("2023-11-16 18:17:00.9303036", 2048, 16),
+    ("2023-11-16 18:17:01.0801247", 4096, 256),
+    ("2023-11-16 18:17:01.3396663", 1024, 256),
+    ("2023-11-16 18:17:01.5612882", 512, 512),
+    ("2023-11-16 18:17:02.1179282", 1024, 512),
+    ("2023-11-16 18:17:04.1489291", 4096, 64),
+    ("2023-11-16 18:17:04.3345679", 128, 128),
+    ("2023-11-16 18:17:06.6384600", 2048, 256),
+    ("2023-11-16 18:17:07.6408494", 1024, 16),
+    ("2023-11-16 18:17:08.4582986", 4096, 16),
+    ("2023-11-16 18:17:09.6356801", 128, 64),
+    ("2023-11-16 18:17:11.6934041", 512, 512),
+]
+
+
+def _azure_csv(path, rows=AZURE_ROWS,
+               header="TIMESTAMP,ContextTokens,GeneratedTokens"):
+    path.write_text(header + "\n" +
+                    "\n".join(f"{t},{c},{g}" for t, c, g in rows) + "\n")
+    return str(path)
+
+
+def test_azure_adapter_jobs_and_roundtrip(configdict, tmp_path):
+    """The adapter yields well-formed arrival-sorted jobs that replay
+    bit-for-bit through the native trace format."""
+    from repro.core.engines import engine_catalogue
+    from repro.core.workload import load_azure_llm_trace
+    path = _azure_csv(tmp_path / "azure.csv")
+    jobs = load_azure_llm_trace(configdict, path)
+    assert len(jobs) == len(AZURE_ROWS)
+    assert [j.id for j in jobs] == list(range(len(jobs)))
+    assert jobs[0].arrival == 0.0
+    assert all(jobs[i].arrival <= jobs[i + 1].arrival
+               for i in range(len(jobs) - 1))
+    cat = set(engine_catalogue())
+    for j in jobs:
+        assert j.engine in cat
+        assert j.queries >= 1 and j.t_qos > 0
+        assert j.request is not None
+    # the exact token counts survive verbatim
+    by_arrival = sorted(AZURE_ROWS)
+    assert [(j.request.prompt_tokens, j.request.decode_tokens)
+            for j in jobs] == [(c, g) for _t, c, g in by_arrival]
+    # round-trip through the native replay format, bit-for-bit
+    out = tmp_path / "native.jsonl"
+    save_trace(out, jobs)
+    back = replay(str(out))
+    assert [(j.id, j.arrival, j.engine, j.queries, j.t_qos, j.tenant,
+             j.request) for j in jobs] == \
+           [(j.id, j.arrival, j.engine, j.queries, j.t_qos, j.tenant,
+             j.request) for j in back]
+    # and the replayed jobs run
+    fleet = synth_fleet(1, 1, 1)
+    res = Simulator(configdict, SynergAI(), fleet=fleet, seed=0).run(back)
+    assert len(res) == len(jobs)
+
+
+def test_azure_adapter_options(configdict, tmp_path):
+    from repro.core.workload import load_azure_llm_trace
+    path = _azure_csv(tmp_path / "azure.csv")
+    jobs = load_azure_llm_trace(configdict, path)
+    # qos_scale scales every deadline; max_jobs truncates; the engine
+    # mix spreads over more than one shape-tied engine
+    scaled = load_azure_llm_trace(configdict, path, qos_scale=2.0)
+    assert all(s.t_qos == pytest.approx(2 * j.t_qos)
+               for s, j in zip(scaled, jobs))
+    few = load_azure_llm_trace(configdict, path, max_jobs=3)
+    assert len(few) == 3
+    assert len({j.engine for j in jobs}) >= 2
+    assert all(j.tenant == "azure" for j in jobs)
+    # float-seconds timestamps and case-insensitive headers also parse
+    alt = _azure_csv(tmp_path / "alt.csv",
+                     rows=[("3.5", 256, 64), ("1.25", 512, 128)],
+                     header="timestamp,CONTEXTTOKENS,generatedtokens")
+    back = load_azure_llm_trace(configdict, alt)
+    assert [j.arrival for j in back] == [0.0, 2.25]
+
+
+def test_azure_adapter_malformed_rows_raise(configdict, tmp_path):
+    from repro.core.workload import load_azure_llm_trace
+
+    def load(name, text):
+        p = tmp_path / name
+        p.write_text(text)
+        return lambda: load_azure_llm_trace(configdict, str(p))
+
+    with pytest.raises(ValueError, match=":1: .*expected a CSV header"):
+        load("empty.csv", "")()
+    with pytest.raises(ValueError, match=":1: missing column"):
+        load("cols.csv", "TIMESTAMP,ContextTokens\n1.0,5\n")()
+    with pytest.raises(ValueError, match=":2: row has 2 cells"):
+        load("short.csv",
+             "TIMESTAMP,ContextTokens,GeneratedTokens\n1.0,5\n")()
+    with pytest.raises(ValueError, match=":3: non-numeric token count"):
+        load("nan.csv", "TIMESTAMP,ContextTokens,GeneratedTokens\n"
+             "1.0,5,5\n2.0,five,5\n")()
+    with pytest.raises(ValueError, match=":2: non-positive token"):
+        load("zero.csv", "TIMESTAMP,ContextTokens,GeneratedTokens\n"
+             "1.0,0,5\n")()
+    with pytest.raises(ValueError, match=":2: bad TIMESTAMP"):
+        load("when.csv", "TIMESTAMP,ContextTokens,GeneratedTokens\n"
+             "someday,5,5\n")()
+    with pytest.raises(ValueError, match="header but no rows"):
+        load("hdr.csv", "TIMESTAMP,ContextTokens,GeneratedTokens\n")()

@@ -15,10 +15,14 @@ full-matrix rebuild — a real regression, not runner noise.  Pass
 
 The headline floors (cached >= 5x uncached at the 10k-job x 64-pool
 backlog; hierarchical >= 4x flat at the region-sharded W=2048 fleet,
-``regions_headline`` from ``bench_regions``) are always enforced when
-the fresh run contains those configs.  ``speedup_hier_vs_flat`` entries
-are gated exactly like ``speedup_vs_uncached`` — both sides measured
-in-process, so the ratio is hardware-independent.
+``regions_headline`` from ``bench_regions``; stale-profile violations
+>= 5x online-loop violations under unmodeled drift, ``drift_headline``
+from ``bench_drift_recovery``) are always enforced when the fresh run
+contains those configs.  ``speedup_hier_vs_flat`` entries are gated
+exactly like ``speedup_vs_uncached`` — both sides measured in-process,
+so the ratio is hardware-independent.  The drift ratio is not even a
+timing: fixed seeds and a fixed degradation timeline make the
+violation counts deterministic, so any drift at all is a code change.
 
 Usage:  python tools/check_perf_regression.py BENCH_SCHED.json fresh.json
 """
@@ -31,9 +35,11 @@ import sys
 
 HEADLINE_FLOOR = 5.0        # cached vs uncached at J=10k, W=64
 REGIONS_FLOOR = 4.0         # hierarchical vs flat at W=2048, k>=16
+DRIFT_FLOOR = 5.0           # stale vs online violations under drift
 
 # the hardware-independent per-config ratios the gate watches
-_SPEEDUPS = ("speedup_vs_uncached", "speedup_hier_vs_flat")
+_SPEEDUPS = ("speedup_vs_uncached", "speedup_hier_vs_flat",
+             "violation_ratio_stale_vs_online")
 
 
 def _index(blob):
@@ -108,6 +114,19 @@ def main(argv=None):
             failures.append(
                 f"regions_headline hier-vs-flat speedup {speed:.2f}x "
                 f"below the {REGIONS_FLOOR:.0f}x acceptance floor")
+    dhead = fresh_blob.get("drift_headline")
+    if dhead:
+        ratio = dhead.get("violation_ratio_stale_vs_online", 0.0)
+        tag = "ok  " if ratio >= DRIFT_FLOOR else "FAIL"
+        print(f"{tag} drift_headline J={dhead.get('J')} "
+              f"W={dhead.get('W')} factor={dhead.get('factor')}: "
+              f"stale {ratio:.2f}x online violations "
+              f"(floor {DRIFT_FLOOR:.0f}x)")
+        if ratio < DRIFT_FLOOR:
+            failures.append(
+                f"drift_headline stale-vs-online violation ratio "
+                f"{ratio:.2f}x below the {DRIFT_FLOOR:.0f}x "
+                f"acceptance floor")
     if failures:
         print("\nperf regression gate FAILED:")
         for f_ in failures:
