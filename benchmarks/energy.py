@@ -36,14 +36,15 @@ def run(cd=None, seeds=(1, 2, 3), emit=print):
                 res = sim.run(jobs)
                 for pool, e in edge_energy(sim.cluster).items():
                     acc[pool] = acc.get(pool, 0.0) + e
-                offs.append(offload_fraction(res))
+                offs.append(offload_fraction(res, sim.cluster))
         energy[P.name] = acc
         offload[P.name] = float(np.mean(offs))
-    peak = {p: max(energy[n].get(p, 0.0) for n in energy) or 1.0
+    peak = {p: max(energy[n].get(p, 0.0) for n in energy)
             for p in {p for n in energy for p in energy[n]}}
     base_names = ["RR", "SRR", "LRU", "MRU", "BE"]
     for name, acc in energy.items():
-        norm = {p: acc.get(p, 0.0) / peak[p] for p in peak}
+        norm = {p: (0.0 if peak[p] <= 0.0 else acc.get(p, 0.0) / peak[p])
+                for p in peak}
         emit(f"energy,{name}," + ",".join(
             f"{p}={v:.3f}" for p, v in sorted(norm.items()))
             + f",cloud_offload={offload[name]:.3f}")

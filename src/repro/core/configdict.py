@@ -27,6 +27,10 @@ class Entry:
     # with it.  Defaulted so ConfigDicts serialized before the field existed
     # still load.
     decode_frac: float = 0.85
+    # static/idle power floor of the slice at this mode (W) — what a busy
+    # worker burns during WAN-transfer seconds and an idle worker burns
+    # while parked.  Defaulted for the same serialization reason.
+    idle_power_w: float = 0.0
 
 
 class ConfigDict:

@@ -31,6 +31,14 @@ HOST_TOKENIZE_S_PER_MB = 0.004  # host pre-processing seconds per MB of request
 MODEL_LOAD_GBPS = 32e9          # weight-load bandwidth (DC network / PCIe-ish)
 ENGINE_INIT_S = 0.8             # fixed engine/backend initialization cost
 
+# Static share of CHIP_TDP_W a powered-on chip draws at zero load (the
+# constant term in OperatingMode.power_w's static + dynamic-c^2 split).
+# This is the idle/static power floor: it is what a slice burns while
+# waiting, what WAN-transfer seconds are billed at (the chips idle while
+# the wire moves bytes), and why "race to idle" — finish fast at a high
+# clock, then idle — beats running slow (paper Fig. 12).
+IDLE_POWER_FRACTION = 0.45
+
 
 @dataclasses.dataclass(frozen=True)
 class OperatingMode:
@@ -57,7 +65,16 @@ class OperatingMode:
         # large static fraction, which is why "race to idle" at high clock
         # saves energy per job — the effect behind the paper's Fig. 12).
         c = self.effective_clock()
-        draw = CHIP_TDP_W * (0.45 + 0.55 * c * c) * self.chips_online
+        draw = CHIP_TDP_W * (IDLE_POWER_FRACTION + 0.55 * c * c) \
+            * self.chips_online
+        return min(draw, self.power_budget_w)
+
+    def idle_power_w(self) -> float:
+        """Static draw of the slice at this operating point: the powered-on
+        chips' idle floor, with no dynamic term.  Capped by the same power
+        budget as the active draw (a budget that clamps active draw clamps
+        the floor too, trivially)."""
+        draw = CHIP_TDP_W * IDLE_POWER_FRACTION * self.chips_online
         return min(draw, self.power_budget_w)
 
 

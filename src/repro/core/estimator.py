@@ -130,6 +130,7 @@ class _EngineTable:
         self.qps = np.empty((0, len(workers)))
         self.pre = np.empty((0, len(workers)))
         self.frac = np.empty((0, len(workers)))   # decode_frac (clamped)
+        self.epq = np.empty((0, len(workers)))    # joules per query (c*)
 
     def _profiled_row(self, engine: str):
         from repro.core.serving_bridge import decode_fraction
@@ -137,6 +138,7 @@ class _EngineTable:
         q = np.zeros(W)
         p = np.zeros(W)
         d = np.zeros(W)
+        e = np.zeros(W)
         for wi, w in enumerate(self.workers):
             ent = (self.cd.default_entry(engine, w) if self.use_default
                    else self.cd.optimal(engine, w))
@@ -144,17 +146,21 @@ class _EngineTable:
                 q[wi] = ent.qps
                 p[wi] = ent.preproc_s
                 d[wi] = decode_fraction(ent)
+                e[wi] = ent.energy_per_query_j
         if self.profile:
+            # overlays are *throughput* beliefs; the profiled joules/query
+            # stay the offline physics (mode power x query time)
             q *= profile_overlay(self.cd, self.profile).factors(
                 engine, self.workers)
-        return q, p, d
+        return q, p, d, e
 
     def _add(self, engine: str):
-        q, p, d = self._profiled_row(engine)
+        q, p, d, e = self._profiled_row(engine)
         self.index[engine] = len(self.qps)
         self.qps = np.vstack([self.qps, q[None]])
         self.pre = np.vstack([self.pre, p[None]])
         self.frac = np.vstack([self.frac, d[None]])
+        self.epq = np.vstack([self.epq, e[None]])
 
     def _refresh_engine(self, engine: str):
         """Rebuild one engine's row in place from the ConfigDict and the
@@ -163,10 +169,11 @@ class _EngineTable:
         i = self.index.get(engine)
         if i is None:
             return
-        q, p, d = self._profiled_row(engine)
+        q, p, d, e = self._profiled_row(engine)
         self.qps[i] = q
         self.pre[i] = p
         self.frac[i] = d
+        self.epq[i] = e
 
     def _rows(self, jobs: Sequence[Job]) -> np.ndarray:
         """[J] row indices into the [E, W] tables, profiling any engine
@@ -187,6 +194,13 @@ class _EngineTable:
         rows = self._rows(jobs)
         return self.qps[rows], self.pre[rows], self.frac[rows]
 
+    def gather_energy(self, jobs: Sequence[Job]) -> np.ndarray:
+        """[J, W] joules/query at each worker's optimal configuration
+        (0 marks infeasible pairs, matching ``qps == 0``)."""
+        # bind rows first: a first-sighted engine rebinds self.epq
+        rows = self._rows(jobs)
+        return self.epq[rows]
+
     def row(self, engine: str):
         """One engine's (qps, preproc, decode_frac) rows over the worker
         list — the per-arrival gather used by SLO-MAEL's vectorized
@@ -196,6 +210,14 @@ class _EngineTable:
             self._add(engine)
             i = self.index[engine]
         return self.qps[i], self.pre[i], self.frac[i]
+
+    def row_energy(self, engine: str) -> np.ndarray:
+        """One engine's joules/query vector over the worker list."""
+        i = self.index.get(engine)
+        if i is None:
+            self._add(engine)
+            i = self.index[engine]
+        return self.epq[i]
 
 
 class _SlicedEngineTable:
@@ -226,9 +248,17 @@ class _SlicedEngineTable:
         cols = self.idx
         return p.qps[rows, cols], p.pre[rows, cols], p.frac[rows, cols]
 
+    def gather_energy(self, jobs: Sequence[Job]) -> np.ndarray:
+        p = self.parent
+        rows = p._rows(jobs)        # may rebind p.epq (first sighting)
+        return p.epq[rows[:, None], self.idx]
+
     def row(self, engine: str):
         q, p, d = self.parent.row(engine)
         return q[self.idx], p[self.idx], d[self.idx]
+
+    def row_energy(self, engine: str) -> np.ndarray:
+        return self.parent.row_energy(engine)[self.idx]
 
 
 # Interned worker tuples: the row cache below used to be keyed by
@@ -329,6 +359,21 @@ def phase_split_matrices(cd: ConfigDict, jobs: Sequence[Job],
         prefill = np.where(qps > 0, pre + exec_q * (1.0 - frac), np.inf)
         decode = np.where(qps > 0, exec_q * frac, np.inf)
     return prefill, decode
+
+
+def energy_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
+                  use_default: bool = False, token: Optional[int] = None,
+                  profile: int = 0) -> np.ndarray:
+    """[J, W] estimated whole-job joules: ``queries x joules/query`` at
+    each worker's profiled optimal configuration, ``inf`` where the pair
+    is infeasible (mirroring Eq. 2's inf cells, so the energy term never
+    resurrects an infeasible placement).  This is the row source behind
+    ``SynergAI(energy_weight=...)``'s weighted energy/carbon term; shares
+    the per-worker-tuple row cache with ``score_matrices``."""
+    epq = _table(cd, workers, use_default, token, profile).gather_energy(jobs)
+    q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,
+                    count=len(jobs))
+    return np.where(epq > 0, q[:, None] * epq, np.inf)
 
 
 def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],

@@ -194,9 +194,16 @@ class RegionRouter:
     break at the lowest region index; a fully-failed feasible set falls
     back to ignoring health (the jobs must queue somewhere)."""
 
-    def __init__(self, cd, views: Dict[str, RegionView]):
+    def __init__(self, cd, views: Dict[str, RegionView], carbon=None):
         self.cd = cd
         self.views = views
+        # optional workload.CarbonTrace: routing scores are weighted by
+        # each region's relative grid intensity at decision time, so the
+        # router prefers clean-grid regions long before any per-worker
+        # scoring happens (None: carbon-blind, bit-for-bit historical)
+        self._carbon = carbon
+        self._cw: Optional[np.ndarray] = None    # [k] relative intensity
+        self._cw_t: Optional[float] = None
         self.regions: List[str] = list(views)
         self._ri = {r: i for i, r in enumerate(self.regions)}
         k = len(self.regions)
@@ -235,6 +242,7 @@ class RegionRouter:
         pass rebuilds it from the live queue)."""
         for i, r in enumerate(self.regions):
             self.healthy[i] = self.views[r].health(now)
+        self._carbon_w(now)
         self.pressure[:] = 0.0
         total = sum(self._counts.values())
         if total > 0.0:
@@ -245,9 +253,26 @@ class RegionRouter:
         else:
             self._cmix = None
 
-    def route(self, job: Job, phase: str = "full") -> str:
+    def _carbon_w(self, now: Optional[float]):
+        """[k] relative region carbon intensities at ``now`` (None
+        without a trace); memoized per timestamp — ``route`` reuses the
+        tick's vector across a whole partition pass."""
+        if self._carbon is None:
+            return None
+        if now is not None and now != self._cw_t:
+            self._cw = np.fromiter(
+                (self._carbon.relative(r, now) for r in self.regions),
+                dtype=np.float64, count=len(self.regions))
+            self._cw_t = now
+        return self._cw
+
+    def route(self, job: Job, phase: str = "full",
+              now: Optional[float] = None) -> str:
         """Pick a home region for ``job``'s current phase (O(k)), pin
-        it, and fold the engine into the drift mix."""
+        it, and fold the engine into the drift mix.  With a CarbonTrace
+        attached, the pressure-per-capacity score is weighted by each
+        region's relative intensity at ``now`` — a region on a 2x-dirty
+        grid must look 2x better on load to win the job."""
         cap = self.capacity(job.engine, phase)
         blend = (cap if self._cmix is None
                  else 0.5 * cap + 0.5 * self._cmix)
@@ -261,6 +286,9 @@ class RegionRouter:
         if ok.any():
             safe = np.where(ok, denom, 1.0)    # denom > 0 wherever ok
             score = np.where(ok, (self.pressure + 1.0) / safe, np.inf)
+            cw = self._carbon_w(now)
+            if cw is not None:
+                score = score * cw             # inf stays inf: cw > 0
             ri = int(score.argmin())
         else:
             ri = 0
@@ -290,10 +318,21 @@ class HierarchicalSynergAI(Policy):
     use_default_config = False
 
     def __init__(self, score_fn=None, incremental: bool = True,
-                 spill: bool = True, recharacterizer=None):
+                 spill: bool = True, recharacterizer=None,
+                 energy_weight: float = 0.0, carbon=None):
         self._score_fn = score_fn
         self._incremental = incremental
         self.spill = spill
+        # the same energy/carbon knob as flat SynergAI, applied at both
+        # levels: every per-region core scores with ``energy_weight`` (and
+        # its region's intensity via the CarbonTrace), and the router's
+        # O(k) aggregates are carbon-weighted so routing itself prefers
+        # clean-grid regions.  0.0 is bit-for-bit the energy-blind
+        # hierarchy.
+        if energy_weight < 0:
+            raise ValueError("energy_weight must be >= 0")
+        self.energy_weight = float(energy_weight)
+        self.carbon = carbon
         # one shared recharacterizer: each region feeds its own drift
         # detector window (observe_arrival(region=...)), any region's
         # trigger runs the single global refresh, and every sub-core's
@@ -312,7 +351,8 @@ class HierarchicalSynergAI(Policy):
         if sub is None:
             sub = self._subs[region] = SynergAI(
                 score_fn=self._score_fn, incremental=self._incremental,
-                recharacterizer=self.recharacterizer)
+                recharacterizer=self.recharacterizer,
+                energy_weight=self.energy_weight, carbon=self.carbon)
         return sub
 
     def _ensure(self, cluster: Cluster):
@@ -329,7 +369,9 @@ class HierarchicalSynergAI(Policy):
             rid[idx] = ri
         self._rid = rid
         old = self.router
-        self.router = RegionRouter(cluster.cd, self._views)
+        self.router = RegionRouter(
+            cluster.cd, self._views,
+            carbon=self.carbon if self.energy_weight else None)
         if old is not None:
             # homes and the drift mix survive a fleet change; stale
             # homes of vanished regions re-route at next sighting
@@ -342,7 +384,7 @@ class HierarchicalSynergAI(Policy):
     def on_arrival(self, job: Job, cluster: Cluster, now: float):
         self._ensure(cluster)
         if len(self._views) > 1 and job.id not in self.router.home:
-            self.router.route(job, cluster.phase_of(job))
+            self.router.route(job, cluster.phase_of(job), now)
         if self.recharacterizer is not None:
             # per-region drift windows: each region's traffic mix is
             # tracked against its own anchor, so a mix flip confined to
@@ -403,7 +445,7 @@ class HierarchicalSynergAI(Policy):
                         r = None
             if r is None:
                 router.pressure[:] = pcount
-                r = router.route(j, phase)
+                r = router.route(j, phase, now)
             parts[r].append(j)
             pcount[rix[r]] += 1.0
         router.pressure[:] = pcount

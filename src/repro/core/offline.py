@@ -28,7 +28,7 @@ def _entry(engine: EngineSpec, worker: WorkerPool, point: ConfigPoint):
     return Entry(engine.name, worker.name, point.mode.name,
                  point.chips_per_replica, est.qps, est.query_time_s,
                  est.preproc_s, est.power_w, est.energy_per_query_j,
-                 est.bottleneck, est.decode_frac)
+                 est.bottleneck, est.decode_frac, est.idle_power_w)
 
 
 def characterize(engines: Optional[Dict[str, EngineSpec]] = None,

@@ -109,6 +109,7 @@ class PerfEstimate:
     feasible: bool
     bottleneck: str
     decode_frac: float = 0.85     # share of query_time_s in per-token decode
+    idle_power_w: float = 0.0     # static floor of the slice at this mode
 
 
 def estimate(engine: EngineSpec, worker: WorkerPool,
@@ -161,7 +162,7 @@ def estimate(engine: EngineSpec, worker: WorkerPool,
     energy = power * query_time / prof.microbatch
     bottleneck = dom_d if t_decode > t_prefill else dom_p
     return PerfEstimate(qps, query_time, preproc, power, energy, True,
-                        bottleneck, decode_frac)
+                        bottleneck, decode_frac, mode.idle_power_w())
 
 
 def config_space(engine: EngineSpec, worker: WorkerPool):

@@ -60,7 +60,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.engines import engine_catalogue
-from repro.core.estimator import estimate_matrix, phase_split_matrices
+from repro.core.estimator import (energy_matrix, estimate_matrix,
+                                  phase_split_matrices)
 from repro.core.scorecache import ScoreCache
 from repro.core.simulator import (PHASE_CODE, PHASE_NAME, Assignment,
                                   Cluster, Policy)
@@ -71,7 +72,8 @@ class SynergAI(Policy):
     use_default_config = False
 
     def __init__(self, score_fn=None, incremental: bool = True,
-                 recharacterizer=None):
+                 recharacterizer=None, energy_weight: float = 0.0,
+                 carbon=None):
         # score_fn: optional accelerated scorer — the Eq. 2-4 Pallas
         # kernel, or the fused v2 kernel (``fused`` attribute) which also
         # consumes the depth penalty / phase split / streaming gates.
@@ -81,6 +83,22 @@ class SynergAI(Policy):
         # offline/online loop — arrivals and completions feed its drift
         # detector, and scoring reads its belief-scaled profile overlay
         # (``estimator.ProfileOverlay``); inert until it triggers.
+        # energy_weight: seconds of estimated latency traded per joule of
+        # estimated job energy — the weighted energy/carbon term added to
+        # Eq. 4's placement cost (``docs/performance.md``).  Acceptability
+        # and doom stay purely time-derived (Eq. 1-3 untouched), so the
+        # term steers choices *among* a job's acceptable open workers and
+        # never parks a job to save energy.  0.0 (default) is bit-for-bit
+        # the energy-blind scheduler: no energy rows are ever built.
+        # carbon: optional ``workload.CarbonTrace`` — scales each worker's
+        # energy term by its region's *relative* grid intensity at
+        # decision time, making the term a carbon term.
+        if energy_weight < 0:
+            raise ValueError("energy_weight must be >= 0")
+        self.energy_weight = float(energy_weight)
+        self.carbon = carbon
+        self._regions_key = None
+        self._regions: tuple = ()
         self.score_fn = score_fn or estimate_matrix
         self._fused = bool(getattr(score_fn, "fused", False))
         self._takes_token = bool(getattr(self.score_fn, "takes_token",
@@ -146,6 +164,9 @@ class SynergAI(Policy):
         penalized = batched and bool((pen != 1.0).any())
         if streaming or disagg:
             cache.ensure_phase_rows(cd, queue, slots, cluster)
+        ew = self.energy_weight
+        if ew:
+            cache.ensure_energy_rows(cd, queue, slots, cluster)
         if self._fused:
             return self._schedule_fused(now, queue, cluster, avail, slots,
                                         t_rem, pen, has_ttft, has_tpot,
@@ -174,7 +195,9 @@ class SynergAI(Policy):
                     doomed[ui] = ~(t_rem[ui, None] >= rows).any(axis=1)
             return self._place_lazy(now, queue, cluster, avail, cache,
                                     slots, t_rem, urgency, doomed, batched,
-                                    pen if penalized else None)
+                                    pen if penalized else None,
+                                    self._carbon_scale(cluster, now)
+                                    if ew else None)
         # phases / deadlines re-derive the whole matrix from the cached
         # rows (still no ConfigDict gathers, no per-job Python)
         t = cache.t_matrix(slots)
@@ -210,18 +233,52 @@ class SynergAI(Policy):
                                np.minimum(urgency, ttft_slack), urgency)
         doomed = ~acceptable.any(axis=1)
         return self._place(now, queue, cluster, avail, t, acceptable,
-                           urgency, doomed, batched, phase)
+                           urgency, doomed, batched, phase,
+                           self._energy_cost(cache, slots, cluster, now)
+                           if ew else None)
+
+    # -- the weighted energy/carbon term -------------------------------
+
+    def _carbon_scale(self, cluster, now):
+        """[W] relative grid carbon intensity of each worker's region at
+        ``now`` (None without a CarbonTrace — the term is pure energy)."""
+        if self.carbon is None:
+            return None
+        region = getattr(cluster, "region", None)
+        if region is not None:          # a hierarchy RegionView: uniform
+            return np.full(len(cluster.arrays.names),
+                           self.carbon.relative(region, now))
+        key = (cluster.serial, cluster.worker_token)
+        if key != self._regions_key:
+            self._regions = tuple(
+                cluster.workers[n].pool.region
+                for n in cluster.arrays.names)
+            self._regions_key = key
+        return self.carbon.relative_for(self._regions, now)
+
+    def _energy_cost(self, cache, slots, cluster, now):
+        """[J, W] additive placement-cost term: weight x estimated job
+        joules (x relative region carbon when a trace is attached)."""
+        ecost = self.energy_weight * cache.energy_matrix(slots)
+        scale = self._carbon_scale(cluster, now)
+        if scale is not None:
+            ecost = ecost * scale[None, :]
+        return ecost
 
     def _place_lazy(self, now, queue, cluster, avail, cache, slots, t_rem,
-                    urgency, doomed, batched, pen=None):
+                    urgency, doomed, batched, pen=None, cscale=None):
         """Order by (urgency, doomed) and evaluate candidate rows one at
         a time, stopping once every open slot is filled — identical
         assignments to the full masked-argmin pass (same per-row
         expressions, same tie-breaks), without materializing [J, W].
         ``pen`` (batched depth penalties, or None when every batch is
         empty) scales each row exactly like the full path's
-        ``t * pen[None, :]``."""
+        ``t * pen[None, :]``.  With ``energy_weight`` set, each row's
+        ranking cost additionally carries the job's cached energy row
+        (``cscale``: per-worker relative carbon, or None) — eligibility
+        and doom stay time-derived."""
         order = np.lexsort((urgency, doomed))
+        ew = self.energy_weight
         busy_wait = (cluster.busy_wait_array(now) if doomed.any()
                      else None)
         emask = {} if batched else None
@@ -242,6 +299,10 @@ class SynergAI(Policy):
             else:
                 cost = row
                 elig = t_rem[ji] >= row
+            if ew:
+                erow = cache.energy_row(slots[ji])
+                cost = cost + (ew * erow if cscale is None
+                               else ew * erow * cscale)
             open_row = open_slots
             if batched:
                 eng = queue[ji].engine       # phase is "full" on this path
@@ -285,7 +346,9 @@ class SynergAI(Policy):
             t0, pre_m, dec_m, t_rem, pen, phase, has_ttft, has_tpot,
             ttft_rem, cache.tpot_qos(slots), cache.dtok(slots))
         return self._place(now, queue, cluster, avail, t, acceptable,
-                           urgency, doomed, batched, phase)
+                           urgency, doomed, batched, phase,
+                           self._energy_cost(cache, slots, cluster, now)
+                           if self.energy_weight else None)
 
     # ------------------------------------------------------------------
     # reference path: full [J, W] rebuild every tick (incremental=False,
@@ -385,14 +448,22 @@ class SynergAI(Policy):
             changed = True
         if changed:
             doomed = ~acceptable.any(axis=1)
+        ecost = None
+        if self.energy_weight:
+            ecost = self.energy_weight * energy_matrix(
+                cluster.cd, queue, workers, use_default=False,
+                token=cluster.worker_token, profile=self.profile)
+            scale = self._carbon_scale(cluster, now)
+            if scale is not None:
+                ecost = ecost * scale[None, :]
         return self._place(now, queue, cluster, avail, t, acceptable,
-                           urgency, doomed, batched, phase)
+                           urgency, doomed, batched, phase, ecost)
 
     # ------------------------------------------------------------------
     # shared placement tail (full-matrix variant)
 
     def _place(self, now, queue, cluster, avail, t, acceptable, urgency,
-               doomed, batched, phase):
+               doomed, batched, phase, ecost=None):
         # order: urgent first (2D Ordered Job Queue); doomed jobs last.
         # lexsort is stable, so ties keep queue order like sorted() did.
         order = np.lexsort((urgency, doomed))
@@ -413,6 +484,11 @@ class SynergAI(Policy):
         else:
             cost = t
             elig = acceptable
+        if ecost is not None:
+            # the weighted energy/carbon term joins the *ranking* cost
+            # only — eligibility, doom and the doomed 1.5x gate above are
+            # already fixed from the time estimates
+            cost = cost + ecost
         if batched:
             # batch-formation rules: a live batch only admits its own
             # engine, under the slot and KV budgets — and, under

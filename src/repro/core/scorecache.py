@@ -42,8 +42,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.engines import engine_catalogue
-from repro.core.estimator import (phase_split_matrices, profile_gen,
-                                  profile_overlay, score_matrices)
+from repro.core.estimator import (energy_matrix, phase_split_matrices,
+                                  profile_gen, profile_overlay,
+                                  score_matrices)
 
 _GROW = 256          # minimum slot-pool growth (amortized doubling)
 
@@ -67,6 +68,7 @@ class ScoreCache:
         self._next = 0                      # high-water mark of the pool
         self._cap = 0
         self._have_phase = False            # pre/dec rows materialized
+        self._have_energy = False           # energy rows materialized
         self._alloc(0, 0)
         # introspection (tests, docs, bench)
         self.flushes = 0
@@ -84,6 +86,7 @@ class ScoreCache:
         self._amin = np.empty(cap, np.intp)  # a column attaining that min
         self._pre = np.empty((cap, W)) if self._have_phase else None
         self._dec = np.empty((cap, W)) if self._have_phase else None
+        self._ene = np.empty((cap, W)) if self._have_energy else None
         self._qos = np.empty(cap)           # static job scalars
         self._arr = np.empty(cap)
         self._ttft_qos = np.empty(cap)
@@ -100,6 +103,7 @@ class ScoreCache:
         self._free = []
         self._next = 0
         self._have_phase = False
+        self._have_energy = False
         self._W = W
         self._alloc(0, W)
 
@@ -119,6 +123,8 @@ class ScoreCache:
         if self._have_phase:
             self._pre = wider(self._pre, (new_cap, self._W))
             self._dec = wider(self._dec, (new_cap, self._W))
+        if self._have_energy:
+            self._ene = wider(self._ene, (new_cap, self._W))
         self._qos = wider(self._qos, new_cap)
         self._arr = wider(self._arr, new_cap)
         self._ttft_qos = wider(self._ttft_qos, new_cap)
@@ -226,6 +232,10 @@ class ScoreCache:
                 token=cluster.worker_token, profile=self.profile)
             self._pre[dest] = pre_m
             self._dec[dest] = dec_m
+        if self._have_energy:
+            self._ene[dest] = energy_matrix(
+                cd, jobs, list(self._names), self.use_default,
+                token=cluster.worker_token, profile=self.profile)
         engines = engine_catalogue()
         for k, (s, j) in enumerate(zip(dest, jobs)):
             r = j.request
@@ -266,6 +276,8 @@ class ScoreCache:
         if self._have_phase:
             self._pre = widen(self._pre)
             self._dec = widen(self._dec)
+        if self._have_energy:
+            self._ene = widen(self._ene)
         self._W = W
         live = [(self._slot[j.id], j) for j in queue
                 if j.id in self._slot]
@@ -294,6 +306,10 @@ class ScoreCache:
                                                     profile=self.profile)
                 self._pre[sl, old_W:] = pre_m
                 self._dec[sl, old_W:] = dec_m
+            if self._have_energy:
+                self._ene[sl, old_W:] = energy_matrix(
+                    cd, jobs, new_names, self.use_default,
+                    profile=self.profile)
 
     def ensure_phase_rows(self, cd, queue, slots, cluster):
         """Materialize the prefill/decode split rows (streaming QoS /
@@ -313,6 +329,26 @@ class ScoreCache:
                 token=cluster.worker_token, profile=self.profile)
             self._pre[slots] = pre_m
             self._dec[slots] = dec_m
+
+    def ensure_energy_rows(self, cd, queue, slots, cluster):
+        """Materialize the estimated whole-job energy rows
+        (``estimator.energy_matrix``: queries x joules/query, inf where
+        infeasible) for every live job — the row source behind
+        ``SynergAI(energy_weight=...)``.  Lazy exactly like the phase
+        rows: never touched at weight 0, kept up to date by later
+        inserts/column extensions, flushed with everything else, and
+        subject to the same invalidation rules.  No-op once enabled."""
+        if self._have_energy:
+            return
+        # stale (departed) slots can't be backfilled — drop them so a
+        # requeued job recomputes all rows together
+        self._reclaim(queue)
+        self._have_energy = True
+        self._ene = np.full((self._cap, self._W), np.inf)
+        if len(queue):
+            self._ene[slots] = energy_matrix(
+                cd, queue, list(self._names), self.use_default,
+                token=cluster.worker_token, profile=self.profile)
 
     # ------------------------------------------------------------------
     # views (all take the slot vector returned by ``sync``)
@@ -340,6 +376,13 @@ class ScoreCache:
 
     def phase_matrices(self, slots):
         return self._pre[slots], self._dec[slots]
+
+    def energy_matrix(self, slots) -> np.ndarray:
+        return self._ene[slots]
+
+    def energy_row(self, s: int) -> np.ndarray:
+        """One job's cached [W] estimated-joules row (a view)."""
+        return self._ene[s]
 
     def waiting(self, slots, now: float) -> np.ndarray:
         return now - self._arr[slots]

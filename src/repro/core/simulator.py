@@ -69,6 +69,15 @@ class WorkerSim:
     busy_s: float = 0.0
     failed_until: float = 0.0      # fault injection
     slowdown: float = 1.0          # straggler injection
+    # static-floor joules burned while parked (idle/static power floor,
+    # constants.IDLE_POWER_FRACTION) — settled once by Simulator.run at
+    # end of run, kept separate so ``energy_j`` stays "active energy"
+    # (the paper's Fig. 12 TDP methodology)
+    idle_energy_j: float = 0.0
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.energy_j + self.idle_energy_j
 
     def __setattr__(self, name, value):
         # write-through into the Cluster's struct-of-arrays mirror
@@ -143,6 +152,14 @@ class BatchedWorkerSim(WorkerSim):
     peak_batch: int = 0
     prefill_tokens: int = 0
     decoded_tokens: int = 0
+    # WAN-transfer seconds folded into members' service (cross-region
+    # input shipping, KV handoffs) still pending their energy re-rate:
+    # the chips idle while the wire moves bytes, so ``accrue`` bills the
+    # next ``xfer_debt_s`` wall-seconds at the batch entry's static floor
+    # instead of its full draw.  ``xfer_idle_s`` counts the seconds
+    # already re-rated (energy-conservation tests reconcile with it).
+    xfer_debt_s: float = 0.0
+    xfer_idle_s: float = 0.0
 
     def _has_slot(self) -> bool:
         return (not self.active
@@ -194,6 +211,13 @@ class BatchedWorkerSim(WorkerSim):
                 f.prefill_done_at = t0 + (f.prefill_s - before) / m
         self.busy_s += dt
         self.energy_j += self.batch_entry.power_w * dt
+        if self.xfer_debt_s > 0.0:
+            # re-rate pending WAN-transfer seconds at the idle floor
+            pay = min(self.xfer_debt_s, dt)
+            self.energy_j -= ((self.batch_entry.power_w
+                               - self.batch_entry.idle_power_w) * pay)
+            self.xfer_debt_s -= pay
+            self.xfer_idle_s += pay
 
     def admit(self, now: float, jid: int, engine: str, entry: Entry,
               prof, request: Request, work_s: float, prefill_s: float):
@@ -236,6 +260,7 @@ class BatchedWorkerSim(WorkerSim):
         self.active.clear()
         self.batch_engine = None
         self.batch_entry = None
+        self.xfer_debt_s = 0.0     # the transfers died with the batch
         self._sync_batch()
 
 
@@ -941,6 +966,15 @@ class Simulator:
                 now = max(now, nxt)
         finally:
             self._heap = None
+        # settle the idle/static power floor over the run's span: parked
+        # seconds burn each pool's cheapest idle draw.  Kept out of
+        # ``energy_j`` (active energy, the Fig. 12 series) but it is what
+        # makes "race to idle" visible in ``total_energy_j`` — fast modes
+        # finish early and idle cheap instead of running long at full draw.
+        span = max((r.end for r in results), default=0.0)
+        for w in self.cluster.workers.values():
+            w.idle_energy_j += (w.pool.idle_power_w
+                                * max(0.0, span - w.busy_s))
         return results
 
     def _speculate(self, now: float, running: Dict[int, "JobResult"]):
@@ -972,6 +1006,13 @@ class Simulator:
             ws_new = self.cluster.workers[w2]
             # the backup wins: cancel the original at the backup's finish
             ws_old.busy_until = end2
+            # refund the cancelled tail [end2, rec.end) that was billed in
+            # full at dispatch — the original worker frees at end2, so
+            # keeping its busy_s/energy_j would charge those seconds twice
+            # (once here, once on the backup)
+            saved = rec.end - end2
+            ws_old.busy_s -= saved
+            ws_old.energy_j -= ent.power_w * saved
             # the original worker's free time is no longer tied to the
             # job's completion record (which now lives on the backup): if a
             # failure later kills the backup, the completion wake becomes
@@ -1089,7 +1130,13 @@ class Simulator:
         w.last_assigned = now
         w.n_jobs += 1
         w.busy_s += exec_s
-        w.energy_j += a.entry.power_w * exec_s
+        if a.xfer_s:
+            # the compute seconds bill at the entry's draw, the WAN-transfer
+            # prefix at the idle/static floor (the chips wait on the wire)
+            w.energy_j += (a.entry.power_w * (exec_s - a.xfer_s)
+                           + a.entry.idle_power_w * a.xfer_s)
+        else:
+            w.energy_j += a.entry.power_w * exec_s
         waiting = start - a.job.arrival
         e2e = end - a.job.arrival
         overhead = now - first_attempt.get(a.job.id, now)
@@ -1212,11 +1259,13 @@ class Simulator:
             work *= self.straggler_factor
             prefill *= self.straggler_factor
         solo_s = work
+        wire_s = 0.0               # WAN/handoff seconds billed at idle floor
         if a.xfer_s:
             # cross-region placement: the input ships over the REGION_XFER
             # link first.  Deterministic link time — not noise-scaled —
             # and it precedes the prefill, so the first token waits on it.
             work += a.xfer_s
+            wire_s += a.xfer_s
             if phase != "decode":
                 prefill += a.xfer_s
         if phase == "decode":
@@ -1231,6 +1280,7 @@ class Simulator:
             pw = self._between[a.job.id].prefill_worker
             if a.worker != pw:
                 work += xfer
+                wire_s += xfer
                 # a decode leg pulling its cache from another *region*
                 # pays the WAN surcharge on top of the in-region handoff
                 pws = self.cluster.workers.get(pw)
@@ -1238,10 +1288,14 @@ class Simulator:
                         and pws.pool.region != w.pool.region):
                     from repro.core.serving_bridge import \
                         region_xfer_extra_s
-                    work += region_xfer_extra_s(prof)
+                    extra = region_xfer_extra_s(prof)
+                    work += extra
+                    wire_s += extra
         w.accrue(now)
         w.admit(now, a.job.id, a.job.engine, a.entry, prof, track_req,
                 work, prefill)
+        if wire_s:
+            w.xfer_debt_s += wire_s
         w.last_assigned = now
         w.n_jobs += 1
         start = now

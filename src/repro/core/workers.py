@@ -51,6 +51,41 @@ class WorkerPool:
     def hbm_capacity(self, mode: OperatingMode) -> int:
         return min(mode.chips_online, self.n_chips) * self.chip_hbm_bytes
 
+    @property
+    def idle_power_w(self) -> float:
+        """The pool's static floor while parked: the cheapest idle draw
+        across its mode table (a board waiting for work throttles to its
+        lowest operating point)."""
+        return min(m.idle_power_w() for m in self.modes)
+
+
+def power_capped_fleet(fleet, cap_w: float,
+                       edge_only: bool = True) -> List[WorkerPool]:
+    """Energy-capped scenario helper: throttle pools to a power budget
+    instead of failing them.
+
+    Each matching pool keeps only the operating modes whose full-load draw
+    fits ``cap_w``; if none fit, the pool throttles to its lowest-draw mode
+    with ``power_budget_w`` clamped to the cap (the board brown-outs to its
+    floor rather than going dark — paper Key Outcome 4: the budget shapes
+    which modes are *enabled*).  The capped pools re-characterize to
+    different optimal configurations, so run ``offline.characterize`` on
+    the returned fleet.  ``edge_only`` leaves cloud pools untouched (the
+    usual scenario: a site-level budget on the edge boxes).
+    """
+    out: List[WorkerPool] = []
+    for pool in fleet:
+        if edge_only and not pool.is_edge:
+            out.append(pool)
+            continue
+        fits = tuple(m for m in pool.modes if m.power_w() <= cap_w)
+        if not fits:
+            low = min(pool.modes, key=lambda m: m.power_w())
+            fits = (dataclasses.replace(
+                low, power_budget_w=min(low.power_budget_w, cap_w)),)
+        out.append(dataclasses.replace(pool, modes=fits))
+    return out
+
 
 def default_fleet() -> List[WorkerPool]:
     """Cloud pod = v5p-class chips (the paper's x86 server analogue: the

@@ -152,6 +152,83 @@ class DiurnalArrivals(_ThinnedArrivals):
 
 
 @dataclasses.dataclass
+class CarbonTrace:
+    """Per-region diurnal grid carbon-intensity curves (gCO2eq/kWh).
+
+    ``intensity(region, t) = base[region] * (1 + amplitude *
+    sin(2 pi (t + phase_s[region]) / period_s))`` — attach to a
+    region-tagged fleet (``synth_fleet(..., regions=k)``) and hand the
+    trace to ``SynergAI(energy_weight=..., carbon=...)`` /
+    ``HierarchicalSynergAI``: regions differ in mean grid mix (``base``)
+    *and* in diurnal phase, so the carbon-optimal region moves over the
+    trace (solar noon walks around the globe).  Unknown regions (e.g. the
+    untagged ``""``) read ``default_g``, flat.
+    """
+
+    base: Dict[str, float]             # region -> mean gCO2eq/kWh
+    amplitude: float = 0.5             # in [0, 1)
+    period_s: float = 86400.0          # diurnal by default
+    phase_s: Optional[Dict[str, float]] = None   # region -> offset seconds
+    default_g: float = 400.0           # intensity of unknown regions
+
+    def intensity(self, region: str, t: float) -> float:
+        base = self.base.get(region)
+        if base is None:
+            return self.default_g
+        off = (self.phase_s or {}).get(region, 0.0)
+        return base * (1.0 + self.amplitude
+                       * math.sin(2.0 * math.pi * (t + off) / self.period_s))
+
+    def mean_intensity(self) -> float:
+        """Across-region mean of the per-region means (the sinusoid
+        integrates to zero over a period) — the normalization behind
+        ``relative``."""
+        if not self.base:
+            return self.default_g
+        return sum(self.base.values()) / len(self.base)
+
+    def relative(self, region: str, t: float) -> float:
+        """Dimensionless intensity (1.0 == fleet-mean grid): what scales
+        the scheduler's energy term into a carbon term without changing
+        ``energy_weight``'s seconds-per-joule units."""
+        m = self.mean_intensity()
+        return self.intensity(region, t) / m if m > 0 else 1.0
+
+    def relative_for(self, regions: Sequence[str], t: float) -> np.ndarray:
+        """[W] ``relative`` over a per-worker region list (memoized per
+        distinct region — fleets have few regions, many workers)."""
+        memo: Dict[str, float] = {}
+        out = np.empty(len(regions))
+        for i, r in enumerate(regions):
+            v = memo.get(r)
+            if v is None:
+                v = memo[r] = self.relative(r, t)
+            out[i] = v
+        return out
+
+    def cleanest(self, regions: Sequence[str], t: float) -> str:
+        """The region with the lowest intensity at ``t``."""
+        return min(regions, key=lambda r: self.intensity(r, t))
+
+    @classmethod
+    def synth(cls, regions: Sequence[str], amplitude: float = 0.5,
+              period_s: float = 86400.0, lo: float = 250.0,
+              hi: float = 700.0) -> "CarbonTrace":
+        """A deterministic synthetic grid for k regions: mean intensities
+        spread linearly over [lo, hi] and diurnal phases staggered by
+        ``period_s / k`` (region i's solar noon lags region i+1's), so
+        both the *structurally* cleanest region and the *instantaneously*
+        cleanest one are exercised."""
+        rs = list(regions)
+        k = max(1, len(rs))
+        base = {r: lo + (hi - lo) * (i / max(1, k - 1) if k > 1 else 0.0)
+                for i, r in enumerate(rs)}
+        phase = {r: period_s * i / k for i, r in enumerate(rs)}
+        return cls(base=base, amplitude=amplitude, period_s=period_s,
+                   phase_s=phase)
+
+
+@dataclasses.dataclass
 class FlashCrowdArrivals(_ThinnedArrivals):
     """Baseline Poisson plus a flash-crowd window at ``spike_factor`` x."""
 

@@ -17,8 +17,9 @@ The headline floors (cached >= 5x uncached at the 10k-job x 64-pool
 backlog; hierarchical >= 4x flat at the region-sharded W=2048 fleet,
 ``regions_headline`` from ``bench_regions``; stale-profile violations
 >= 5x online-loop violations under unmodeled drift, ``drift_headline``
-from ``bench_drift_recovery``) are always enforced when the fresh run
-contains those configs.  ``speedup_hier_vs_flat`` entries are gated
+from ``bench_drift_recovery``; energy-or-carbon-aware cut >= 20% at
+<= +10% extra violations, ``energy_headline`` from ``bench_energy``)
+are always enforced when the fresh run contains those configs.  ``speedup_hier_vs_flat`` entries are gated
 exactly like ``speedup_vs_uncached`` — both sides measured in-process,
 so the ratio is hardware-independent.  The drift ratio is not even a
 timing: fixed seeds and a fixed degradation timeline make the
@@ -36,10 +37,13 @@ import sys
 HEADLINE_FLOOR = 5.0        # cached vs uncached at J=10k, W=64
 REGIONS_FLOOR = 4.0         # hierarchical vs flat at W=2048, k>=16
 DRIFT_FLOOR = 5.0           # stale vs online violations under drift
+ENERGY_FLOOR = 0.20         # aware-vs-blind energy *or* carbon cut
+ENERGY_VIOL_CEIL = 0.10     # allowed extra QoS violations, relative
 
 # the hardware-independent per-config ratios the gate watches
 _SPEEDUPS = ("speedup_vs_uncached", "speedup_hier_vs_flat",
-             "violation_ratio_stale_vs_online")
+             "violation_ratio_stale_vs_online",
+             "energy_reduction_vs_blind", "carbon_reduction_vs_blind")
 
 
 def _index(blob):
@@ -127,6 +131,29 @@ def main(argv=None):
                 f"drift_headline stale-vs-online violation ratio "
                 f"{ratio:.2f}x below the {DRIFT_FLOOR:.0f}x "
                 f"acceptance floor")
+    ehead = fresh_blob.get("energy_headline")
+    if ehead:
+        # deterministic like the drift ratio: fixed seeds, no timing.
+        # acceptance is energy OR carbon >= 20% cut, at <= +10% extra
+        # QoS violations vs the energy-blind baseline.
+        cut = max(ehead.get("energy_reduction", 0.0),
+                  ehead.get("carbon_reduction", 0.0))
+        over = ehead.get("violation_overhead", 0.0)
+        ok = cut >= ENERGY_FLOOR and over <= ENERGY_VIOL_CEIL
+        tag = "ok  " if ok else "FAIL"
+        print(f"{tag} energy_headline J={ehead.get('J')} "
+              f"W={ehead.get('W')}: best aware-vs-blind cut "
+              f"{cut:.3f} (floor {ENERGY_FLOOR:.2f}), violation "
+              f"overhead {over:+.3f} (ceiling "
+              f"+{ENERGY_VIOL_CEIL:.2f})")
+        if cut < ENERGY_FLOOR:
+            failures.append(
+                f"energy_headline aware-vs-blind cut {cut:.3f} below "
+                f"the {ENERGY_FLOOR:.2f} acceptance floor")
+        if over > ENERGY_VIOL_CEIL:
+            failures.append(
+                f"energy_headline violation overhead {over:+.3f} above "
+                f"the +{ENERGY_VIOL_CEIL:.2f} ceiling")
     if failures:
         print("\nperf regression gate FAILED:")
         for f_ in failures:
