@@ -288,6 +288,7 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
                                          (10_000, (8, 28, 28))),
                          iters=40, churn=64, tick=1.0,
                          pallas_max_j=2_000, utilization=0.8,
+                         only=None, interpret=True, strict_parity=False,
                          emit=print):
     """Per-tick scheduler decision time under a standing MMPP backlog.
 
@@ -297,10 +298,21 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
     (placed jobs leave the queue, their workers go busy) and injects
     ``churn`` fresh arrivals.  That makes the *incremental* cost visible:
     the cached variant re-scores only the churn, the uncached variant
-    rebuilds the full [J, W] matrix every tick.  Pallas variants run in
-    interpret mode on CPU (the kernel emulated op-by-op — wall-clock is
-    not the point there; compiled numbers come from TPU hardware), so
-    they are capped at ``pallas_max_j`` by default."""
+    rebuilds the full [J, W] matrix every tick, and the device-resident
+    ``pallas-resident`` variant ships only the churn's rows host->device
+    and runs the whole decision as one fused dispatch.  Pallas variants
+    run in interpret mode on CPU by default (the kernel emulated
+    op-by-op — wall-clock is not the point there), capped at
+    ``pallas_max_j``; ``interpret=False`` runs the compiled backend and
+    suffixes the variant names ``-compiled`` so accelerator numbers land
+    under their own regression keys (parity-gated, ratio-tracked —
+    never floored until real accelerator baselines are committed).
+
+    Every Pallas variant's per-tick assignments are compared against the
+    cached numpy variant's on the identical churn stream and recorded as
+    ``assignments_match_cached``; ``strict_parity=True`` raises on any
+    mismatch (the CI smoke contract).  ``only`` restricts the run to
+    ``("cached", only)`` for the tier-1 smoke leg."""
     import numpy as np
 
     from repro.core.job import exec_time
@@ -309,18 +321,27 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
     from repro.core.workload import scenario
 
     cd = cd or characterize()
+    suffix = "" if interpret else "-compiled"
     variants = [
         ("uncached", lambda: SynergAI(incremental=False)),
         ("cached", lambda: SynergAI()),
-        ("pallas", lambda: SynergAI(score_fn=make_pallas_score_fn())),
-        ("pallas-v2",
-         lambda: SynergAI(score_fn=make_pallas_score_fn(v2=True))),
+        ("pallas" + suffix, lambda: SynergAI(
+            score_fn=make_pallas_score_fn(interpret=interpret))),
+        ("pallas-v2" + suffix, lambda: SynergAI(
+            score_fn=make_pallas_score_fn(v2=True, interpret=interpret))),
+        ("pallas-resident" + suffix, lambda: SynergAI(
+            score_fn=make_pallas_score_fn(device_cache=True,
+                                          interpret=interpret))),
     ]
+    if only is not None:
+        keep = {"cached", only, only + suffix}
+        variants = [v for v in variants if v[0] in keep]
     results = []
     for J, pools in sizes:
         fleet = synth_fleet(*pools)
         W = len(fleet)
         base = {}
+        cached_log = None
         for name, mk in variants:
             if name.startswith("pallas") and J > pallas_max_j:
                 continue
@@ -337,7 +358,7 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
             rng = np.random.default_rng(0)
             names = cl.arrays.names
             pol.schedule(now, queue, cl)        # warm caches / tracing
-            ticks, placed_total = [], 0
+            ticks, placed_total, asg_log = [], 0, []
             for i in range(iters):
                 now += tick
                 for wi in rng.choice(W, size=min(churn, W),
@@ -346,6 +367,7 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
                 t0 = time.perf_counter()
                 asg = pol.schedule(now, queue, cl)
                 ticks.append(time.perf_counter() - t0)
+                asg_log.append([(a.job.id, a.worker) for a in asg])
                 placed = set()
                 for a in asg:
                     cl.workers[a.worker].busy_until = (
@@ -367,11 +389,33 @@ def bench_sched_overhead(cd=None, sizes=((2_000, (8, 28, 28)),
                 base[(J, W)] = mean_ms
             if (J, W) in base:
                 rec["speedup_vs_uncached"] = base[(J, W)] / mean_ms
+            if name == "cached":
+                cached_log = asg_log
+            if name.startswith("pallas") and cached_log is not None:
+                match = asg_log == cached_log
+                rec["assignments_match_cached"] = match
+                if strict_parity and not match:
+                    bad = next(i for i, (a, b)
+                               in enumerate(zip(asg_log, cached_log))
+                               if a != b)
+                    raise RuntimeError(
+                        f"{name} diverged from cached at tick {bad}: "
+                        f"{asg_log[bad][:4]} != {cached_log[bad][:4]}")
+            if name.startswith("pallas-resident"):
+                dc = pol.cache
+                rec["hd_bytes_per_tick"] = dc.bytes_to_device / dc.ticks
+                rec["rows_uploaded"] = dc.rows_uploaded
+                rec["fail_masks"] = dc.fail_masks
+                rec["flushes"] = dc.flushes
             results.append(rec)
             emit(f"sched_overhead,{name},J={J},W={W},"
                  f"mean_tick_ms={mean_ms:.2f},p50_tick_ms={p50_ms:.2f},"
                  f"speedup_vs_uncached="
-                 f"{rec.get('speedup_vs_uncached', 1.0):.2f}x")
+                 f"{rec.get('speedup_vs_uncached', 1.0):.2f}x"
+                 + (",parity="
+                    + ("ok" if rec["assignments_match_cached"]
+                       else "MISMATCH")
+                    if "assignments_match_cached" in rec else ""))
     head = [r for r in results
             if r["variant"] == "cached" and r["J"] == 10_000]
     blob = {"schema": 1, "bench": "bench_sched_overhead",
@@ -838,6 +882,20 @@ def main(argv=None):
     p.add_argument("--sched-big", action="store_true",
                    help="extend bench_sched_overhead to the 50k-job x "
                         "256-pool sweep (numpy backends only)")
+    p.add_argument("--sched-smoke", metavar="VARIANT", default=None,
+                   help="run bench_sched_overhead as a small strict-"
+                        "parity smoke of VARIANT (e.g. pallas-resident) "
+                        "against the cached numpy path — seconds; the "
+                        "tier-1 CI sanity leg; exits nonzero on any "
+                        "assignment divergence")
+    p.add_argument("--sched-backend", choices=("auto", "interpret",
+                                               "compiled"),
+                   default="interpret",
+                   help="Pallas execution backend for the sched bench: "
+                        "interpret (CPU-emulated, the parity reference), "
+                        "compiled (lowered kernels; variants recorded "
+                        "under '-compiled' keys), auto (compiled on "
+                        "TPU, interpret elsewhere)")
     p.add_argument("--sched-json", metavar="PATH", default=None,
                    help="write the bench_sched_overhead + bench_regions "
                         "results as JSON (the BENCH_SCHED.json schema; "
@@ -873,13 +931,26 @@ def main(argv=None):
     if not args.skip_scoring:
         print("# scoring: numpy vs Pallas kernel")
         bench_scoring(cd)
+    if args.sched_backend == "auto":
+        import jax
+        interpret = jax.default_backend() != "tpu"
+    else:
+        interpret = args.sched_backend == "interpret"
     sched = None
-    if not args.skip_sched:
+    if args.sched_smoke:
+        print(f"# scheduler overhead smoke: cached vs {args.sched_smoke}"
+              " (strict parity)")
+        sched = bench_sched_overhead(
+            cd, sizes=((256, (2, 3, 3)),), iters=6, churn=16,
+            only=args.sched_smoke, interpret=interpret,
+            strict_parity=True)
+    elif not args.skip_sched:
         print("# scheduler overhead: uncached vs score-cache vs Pallas")
         sizes = [(2_000, (8, 28, 28)), (10_000, (8, 28, 28))]
         if args.sched_big:
             sizes.append((50_000, (86, 85, 85)))
-        sched = bench_sched_overhead(cd, sizes=tuple(sizes))
+        sched = bench_sched_overhead(cd, sizes=tuple(sizes),
+                                     interpret=interpret)
     if not args.skip_regions:
         print("# region sharding: flat vs hierarchical scheduler")
         reg = bench_regions(cd, smoke=args.regions_smoke)

@@ -111,6 +111,16 @@ class ScoreResult:
     urgency: np.ndarray            # [J]  (lower == more urgent)
     doomed: np.ndarray             # [J] bool — no acceptable worker
 
+    @classmethod
+    def empty(cls, workers: Sequence[str]) -> "ScoreResult":
+        """The shaped zero-job result every scoring backend shares: all
+        per-job axes are length 0, the worker axis keeps its width so
+        downstream matrix consumers see consistent shapes."""
+        z = np.zeros((0, len(workers)))
+        return cls(list(workers), z, np.zeros(0), z.astype(bool),
+                   np.zeros(0, np.int64), np.zeros(0),
+                   np.zeros(0, bool))
+
 
 class _EngineTable:
     """Stacked per-engine (qps, preproc) rows over a fixed worker list.
@@ -382,6 +392,8 @@ def estimate_matrix(cd: ConfigDict, jobs: Sequence[Job], workers: List[str],
                     profile: int = 0) -> ScoreResult:
     """Vectorized Eq. 1-4 over all queued jobs and all workers."""
     J = len(jobs)
+    if not J:
+        return ScoreResult.empty(workers)
     qps, pre = score_matrices(cd, jobs, workers, use_default, token,
                               profile)
     q = np.fromiter((float(j.queries) for j in jobs), dtype=np.float64,

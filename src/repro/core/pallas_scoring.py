@@ -40,19 +40,18 @@ from repro.core.estimator import ScoreResult, score_matrices
 
 
 def make_pallas_score_fn(bj: int = 128, interpret: bool = True,
-                         v2: bool = False):
+                         v2: bool = False, device_cache: bool = False):
+    if device_cache:
+        return _make_device_marker(bj, interpret)
     if v2:
         return _make_fused_score_fn(bj, interpret)
     from repro.kernels.scheduler_score import scheduler_score
 
     def score_fn(cd, jobs, workers, now, use_default=False,
                  token=None) -> ScoreResult:
-        t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])
         if not jobs:
-            z = np.zeros((0, len(workers)))
-            return ScoreResult(list(workers), z, t_rem, z.astype(bool),
-                               np.zeros(0, np.int64), np.zeros(0),
-                               np.zeros(0, bool))
+            return ScoreResult.empty(workers)
+        t_rem = np.array([j.t_qos - (now - j.arrival) for j in jobs])
         qps, pre = score_matrices(cd, jobs, workers, use_default, token)
         q = np.array([float(j.queries) for j in jobs], np.float32)
         est, best, urg, acc = scheduler_score(
@@ -69,6 +68,27 @@ def make_pallas_score_fn(bj: int = 128, interpret: bool = True,
 
     score_fn.takes_token = True
     return score_fn
+
+
+def _make_device_marker(bj: int, interpret):
+    """``make_pallas_score_fn(device_cache=True)`` — the device-resident
+    backend.  Unlike the other variants this is a *marker*, not a scoring
+    callable: ``SynergAI`` consumes its attributes to build a
+    ``repro.core.devicecache.DeviceScoreCache`` (persistent on-device row
+    pools) and routes every tick through the fused ``scheduler_tick``
+    kernel dispatch, so no host-side score function ever runs.
+    ``interpret=None`` auto-selects (compiled on TPU, interpret
+    elsewhere)."""
+    def device_score(*_a, **_k):
+        raise TypeError(
+            "make_pallas_score_fn(device_cache=True) returns a backend "
+            "marker consumed by SynergAI, not a callable score_fn — the "
+            "tick runs through DeviceScoreCache.device_tick")
+    device_score.device_cache = True
+    device_score.takes_profile = True
+    device_score.bj = bj
+    device_score.interpret = interpret
+    return device_score
 
 
 def _make_fused_score_fn(bj: int, interpret: bool):

@@ -101,6 +101,7 @@ class SynergAI(Policy):
         self._regions: tuple = ()
         self.score_fn = score_fn or estimate_matrix
         self._fused = bool(getattr(score_fn, "fused", False))
+        self._device = bool(getattr(score_fn, "device_cache", False))
         self._takes_token = bool(getattr(self.score_fn, "takes_token",
                                          False))
         self._takes_profile = bool(getattr(self.score_fn, "takes_profile",
@@ -115,10 +116,18 @@ class SynergAI(Policy):
                 "kernel, or a backend advertising takes_profile")
         # a conventional custom score_fn builds its own matrices, so the
         # row cache would be dead weight; the fused kernel reads its
-        # matrices *from* the cache, so it always carries one
-        self.cache: Optional[ScoreCache] = (
-            ScoreCache(profile=self.profile) if self._fused
-            or (incremental and score_fn is None) else None)
+        # matrices *from* the cache, so it always carries one; the
+        # device-resident backend carries the device-mirrored subclass
+        if self._device:
+            from repro.core.devicecache import DeviceScoreCache
+            self.cache: Optional[ScoreCache] = DeviceScoreCache(
+                profile=self.profile,
+                bj=getattr(score_fn, "bj", 128),
+                interpret=getattr(score_fn, "interpret", None))
+        else:
+            self.cache = (
+                ScoreCache(profile=self.profile) if self._fused
+                or (incremental and score_fn is None) else None)
 
     # -- online re-characterization hooks (inert without one) ----------
 
@@ -167,6 +176,10 @@ class SynergAI(Policy):
         ew = self.energy_weight
         if ew:
             cache.ensure_energy_rows(cd, queue, slots, cluster)
+        if self._device:
+            return self._schedule_device(now, queue, cluster, avail, slots,
+                                         t_rem, pen, has_ttft, has_tpot,
+                                         batched, disagg)
         if self._fused:
             return self._schedule_fused(now, queue, cluster, avail, slots,
                                         t_rem, pen, has_ttft, has_tpot,
@@ -321,6 +334,64 @@ class SynergAI(Policy):
                 n_open -= 1
                 if n_open == 0:
                     break
+        return out
+
+    # ------------------------------------------------------------------
+    # device-resident path: the cache's row pools already live on the
+    # accelerator, so the whole decision — gather by slot, the fused
+    # scoring kernel, the urgency-ordered greedy placement — runs as one
+    # ``scheduler_tick`` dispatch; the host ships only O(J + W) vectors
+    # and reads back (job, worker) indices
+
+    def _schedule_device(self, now, queue, cluster, avail, slots, t_rem,
+                         pen, has_ttft, has_tpot, batched, disagg):
+        cache = self.cache
+        phase = np.zeros(len(queue), dtype=np.int8)
+        if disagg:
+            phase = np.fromiter(
+                (PHASE_CODE[cluster.phase_of(j)] for j in queue),
+                dtype=np.int8, count=len(queue))
+        # Eq. 1 decay stays a float64 host op over the cached scalars
+        # (the f32 cast of `now` itself would lose precision long before
+        # the budgets do); everything [J, W]-shaped stays on-device
+        ttft_rem = cache.ttft_qos(slots) - cache.waiting(slots, now)
+        if batched:
+            keys = {}
+            masks = []
+            ekey = np.empty(len(queue), np.int32)
+            for qi, j in enumerate(queue):
+                k = (j.engine, int(phase[qi]))
+                ki = keys.get(k)
+                if ki is None:
+                    ki = keys[k] = len(masks)
+                    masks.append(cluster.admit_engine_mask(
+                        j.engine, now, PHASE_NAME[k[1]]))
+                ekey[qi] = ki
+            emask = np.stack(masks)
+        else:
+            ekey = np.zeros(len(queue), np.int32)
+            emask = np.ones((1, len(avail)), bool)
+        escale = None
+        if self.energy_weight:
+            cscale = self._carbon_scale(cluster, now)
+            escale = self.energy_weight * (
+                cscale if cscale is not None else np.ones(len(avail)))
+        assign, order = cache.device_tick(
+            slots, t_rem, ttft_rem, cache.tpot_qos(slots),
+            cache.dtok(slots), has_ttft, has_tpot, phase, ekey, emask,
+            pen, cluster.busy_wait_array(now), avail, escale)
+        names = cluster.arrays.names
+        cd = cluster.cd
+        J = len(queue)
+        out: List[Assignment] = []
+        for ji in order:        # same emit order as _place's sorted walk
+            if ji >= J:
+                continue
+            wi = int(assign[ji])
+            if wi >= 0:
+                job = queue[ji]
+                out.append(Assignment(job, names[wi],
+                                      cd.optimal(job.engine, names[wi])))
         return out
 
     # ------------------------------------------------------------------

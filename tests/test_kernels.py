@@ -193,6 +193,189 @@ def test_scheduler_score_matches_core_estimator(configdict):
                                rtol=1e-4, atol=0.5)
 
 
+# ----------------------------------------------------------------------------
+# pure-*numpy* oracles (independent of the jnp ref module) + the padding
+# edges, so moe_routing / rwkv_scan / the ops wrappers stop being dark
+
+
+def _moe_np(x, w, top_k):
+    """Numpy mirror of the kernel: softmax over router logits, iterative
+    top-k with first-index tie-breaks, renormalized over the selection."""
+    logits = np.asarray(x, np.float32) @ np.asarray(w, np.float32)
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = e / e.sum(-1, keepdims=True)
+    remaining = probs.copy()
+    sel = np.zeros_like(probs)
+    for _ in range(top_k):
+        pick = np.zeros_like(probs, bool)
+        pick[np.arange(len(probs)), remaining.argmax(-1)] = True
+        pick &= remaining > 0
+        sel += np.where(pick, probs, 0.0)
+        remaining[pick] = -1.0
+    return sel / np.maximum(sel.sum(-1, keepdims=True), 1e-9)
+
+
+def _rwkv_np(r, k, v, w, u):
+    """Numpy mirror of the sequential WKV recurrence."""
+    r, k, v, w = (np.asarray(a, np.float32) for a in (r, k, v, w))
+    u = np.asarray(u, np.float32)
+    B, S, H, hd = r.shape
+    state = np.zeros((B, H, hd, hd), np.float32)
+    out = np.zeros_like(r)
+    for t in range(S):
+        kv = k[:, t, :, :, None] * v[:, t, :, None, :]
+        out[:, t] = np.einsum(
+            "bhk,bhkv->bhv", r[:, t], state + u[None, :, :, None] * kv)
+        state = w[:, t, :, :, None] * state + kv
+    return out
+
+
+@pytest.mark.parametrize("T,D,E,k,bt", [
+    (96, 32, 8, 2, 128),     # T < bt: block clamps to the full batch
+    (192, 64, 16, 1, 64),    # multi-block, top-1
+    (128, 32, 6, 4, 128),    # k large relative to E
+])
+def test_moe_routing_vs_numpy_oracle(T, D, E, k, bt):
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((T, D)).astype(np.float32)
+    w = rng.standard_normal((D, E)).astype(np.float32)
+    got = np.asarray(moe_routing(x, w, k, bt=bt, interpret=True))
+    np.testing.assert_allclose(got, _moe_np(x, w, k),
+                               rtol=1e-4, atol=1e-5)
+    assert ((got > 0).sum(axis=1) == k).all()
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 48, 2, 16, 64),      # S < chunk: single clamped chunk
+    (2, 96, 1, 32, 32),      # multi-chunk, state carried across
+])
+def test_rwkv_scan_vs_numpy_oracle(B, S, H, hd, chunk):
+    rng = np.random.default_rng(7)
+    shape = (B, S, H, hd)
+    r = rng.standard_normal(shape).astype(np.float32)
+    k = rng.standard_normal(shape).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    w = np.exp(-np.exp(rng.standard_normal(shape))).astype(np.float32)
+    u = rng.standard_normal((H, hd)).astype(np.float32)
+    got = np.asarray(rwkv_scan(r, k, v, w, u, chunk=chunk,
+                               interpret=True))
+    np.testing.assert_allclose(got, _rwkv_np(r, k, v, w, u),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------------
+# ops.py: the jit'd public wrappers (interpret auto-resolves off-TPU)
+
+
+def test_ops_wrappers_match_references():
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    B, S, H, K, hd = 1, 128, 4, 2, 32
+    q = rand(ks[0], (B, S, H, hd), jnp.float32)
+    k = rand(ks[1], (B, S, K, hd), jnp.float32)
+    v = rand(ks[2], (B, S, K, hd), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.flash_attention(q, k, v, causal=True)),
+        np.asarray(ref.flash_attention_ref(q, k, v, causal=True)),
+        **TOL32)
+
+    qd = rand(ks[3], (B, 1, H, hd), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.decode_attention(qd, k, v, 100, bk=64)),
+        np.asarray(ref.decode_attention_ref(qd, k, v, 100)), **TOL32)
+
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((128, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 8)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.moe_routing(x, w, 2)), _moe_np(x, w, 2),
+        rtol=1e-4, atol=1e-5)
+
+    shape = (1, 64, 2, 16)
+    r_ = rng.standard_normal(shape).astype(np.float32)
+    k_ = rng.standard_normal(shape).astype(np.float32)
+    v_ = rng.standard_normal(shape).astype(np.float32)
+    w_ = np.exp(-np.exp(rng.standard_normal(shape))).astype(np.float32)
+    u_ = rng.standard_normal((2, 16)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.rwkv_scan(r_, k_, v_, w_, u_, chunk=32)),
+        _rwkv_np(r_, k_, v_, w_, u_), rtol=2e-4, atol=2e-4)
+
+    qps = rng.uniform(0.5, 50, (40, 7)).astype(np.float32)
+    qps[rng.random((40, 7)) < 0.2] = 0.0
+    pre = rng.uniform(0.1, 5, (40, 7)).astype(np.float32)
+    qn = rng.integers(10, 500, 40).astype(np.float32)
+    rem = rng.uniform(1, 500, 40).astype(np.float32)
+    est, best, urg, acc = ops.scheduler_score(qps, pre, qn, rem, bj=64)
+    est_r, best_r, urg_r, acc_r = ref.scheduler_score_ref(qps, pre, qn,
+                                                          rem)
+    np.testing.assert_array_equal(np.asarray(best), best_r)
+    np.testing.assert_array_equal(np.asarray(acc), acc_r)
+    feas = qps > 0
+    np.testing.assert_allclose(np.asarray(est)[feas], est_r[feas],
+                               rtol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# the fused whole-tick kernel (device-resident path): placement parity
+# against a direct numpy transcription of SynergAI._place
+
+
+def test_scheduler_tick_matches_numpy_placement():
+    import jax.numpy as jnp2
+    from repro.kernels.scheduler_score import scheduler_tick
+
+    rng = np.random.default_rng(3)
+    cap, W, J, bj = 64, 16, 40, 8
+    Jp = 40
+    pool = rng.uniform(0.5, 30, (cap, W)).astype(np.float32)
+    pool[rng.random((cap, W)) < 0.15] = np.inf
+    slots = rng.permutation(cap)[:J].astype(np.int32)
+    t_rem = rng.uniform(-5, 40, J).astype(np.float32)
+    pen = np.where(rng.random(W) < 0.3, 2.0, 1.0).astype(np.float32)
+    bw = rng.uniform(0, 10, W).astype(np.float32)
+    avail = rng.random(W) < 0.6
+    zero = np.zeros(J, np.int32)
+    inf = np.full(J, np.inf, np.float32)
+    one = np.ones(J, np.float32)
+    emask = np.ones((1, W), bool)
+    assign, order = scheduler_tick(
+        jnp2.asarray(pool), jnp2.asarray(pool), jnp2.asarray(pool),
+        jnp2.zeros((1, W), jnp2.float32), jnp2.asarray(slots),
+        jnp2.asarray(t_rem), jnp2.asarray(inf), jnp2.asarray(inf),
+        jnp2.asarray(one), jnp2.asarray(zero), jnp2.asarray(zero),
+        jnp2.asarray(zero), jnp2.asarray(zero), jnp2.asarray(emask),
+        jnp2.asarray(pen), jnp2.asarray(bw),
+        jnp2.asarray(np.zeros(W, np.float32)), jnp2.asarray(avail),
+        bj=bj, interpret=True)
+    assign, order = np.asarray(assign), np.asarray(order)
+
+    # numpy transcription of the scoring + _place walk
+    t = pool[slots] * pen[None, :]
+    acc = t_rem[:, None] >= t
+    urg = t_rem - pool[slots].min(axis=1)
+    doom = ~acc.any(axis=1)
+    feas = np.isfinite(t)
+    costd = t + bw[None, :]
+    best = np.where(feas, costd, np.inf).min(axis=1)
+    elig = np.where(doom[:, None], feas & (t <= 1.5 * best[:, None]),
+                    acc)
+    ranked = np.where(elig, np.where(doom[:, None], costd, t), np.inf)
+    want_order = np.lexsort((urg, doom))
+    np.testing.assert_array_equal(order, want_order)
+    want = np.full(J, -1, np.int32)
+    open_slots = avail.copy()
+    for ji in want_order:
+        cand = np.where(open_slots, ranked[ji], np.inf)
+        wi = int(cand.argmin())
+        if np.isfinite(cand[wi]):
+            want[ji] = wi
+            open_slots[wi] = False
+    np.testing.assert_array_equal(assign, want)
+    assert (assign >= 0).any()          # something actually placed
+
+
 @settings(max_examples=25, deadline=None)
 @given(j=st.integers(1, 40), w=st.integers(1, 8), seed=st.integers(0, 999))
 def test_scheduler_score_property(j, w, seed):

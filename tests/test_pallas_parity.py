@@ -197,3 +197,130 @@ def test_synergai_v2_drop_in(configdict):
                     utilization=0.9, seed=5)
     assert run(None, jobs, fleet=fleet, seed=5) \
         == run(make_pallas_score_fn(v2=True), jobs, fleet=fleet, seed=5)
+
+
+# ----------------------------------------------------------------------------
+# the float32 boundary-tie caveat, as an executable contract: a QoS
+# budget that ties the estimate at the last float64 bit may flip between
+# acceptable and doomed (the kernels score in f32), and that divergence
+# is confined to the tie — everything with real margin agrees exactly
+
+
+def _tie_inputs():
+    """2 jobs x 2 workers; job 0's budget sits one f64 ulp *below* its
+    worker-0 estimate (t = 0.25 + 100/2.0 = 50.25, exact in f32 and
+    f64), so float64 rejects while the float32 cast rounds the budget
+    back onto the estimate and accepts.  Job 1 has generous margins
+    everywhere."""
+    qps = np.array([[2.0, 1.0], [2.0, 4.0]])
+    pre = np.array([[0.25, 0.5], [0.25, 0.5]])
+    q = np.array([100.0, 100.0])
+    t = pre + q[:, None] / qps           # [[50.25, 100.5], [50.25, 25.5]]
+    t_rem = np.array([np.nextafter(50.25, 0.0), 60.0])
+    return qps, pre, q, t, t_rem
+
+
+def test_f32_boundary_tie_contract_v1():
+    qps, pre, q, t, t_rem = _tie_inputs()
+    # the f64 oracle: the tie cell misses by one ulp
+    acc64 = t_rem[:, None] >= t
+    assert not acc64[0, 0] and not acc64[0].any()    # doomed in f64
+    assert acc64[1].all()
+    # the f32 cast lands exactly on the estimate -> acceptable
+    assert np.float32(t_rem[0]) == np.float32(t[0, 0]) == 50.25
+    from repro.kernels.scheduler_score import scheduler_score
+    est, best, urg, acc = scheduler_score(
+        qps.astype(np.float32), pre.astype(np.float32),
+        q.astype(np.float32), t_rem.astype(np.float32), bj=8,
+        interpret=True)
+    acc = np.asarray(acc).astype(bool)
+    # divergence confined to the documented tie cell
+    assert acc[0, 0] and not acc64[0, 0]
+    diff = acc != acc64
+    assert diff.sum() == 1 and diff[0, 0]
+    # exact parity off the boundary: estimates are the same dyadic
+    # rationals in both precisions here, margins are wide
+    np.testing.assert_array_equal(np.asarray(est, np.float64), t)
+    assert (acc[1] == acc64[1]).all()
+
+
+def test_f32_boundary_tie_contract_v2():
+    qps, pre, q, t, t_rem = _tie_inputs()
+    acc64 = t_rem[:, None] >= t
+    J, W = t.shape
+    fn = make_pallas_score_fn(bj=8, v2=True)
+    t2, acc, urg, doom = fn(
+        t, t, t, t_rem, np.ones(W), np.zeros(J, np.int8),
+        np.zeros(J, bool), np.zeros(J, bool), np.full(J, np.inf),
+        np.full(J, np.inf), np.ones(J))
+    diff = acc != acc64
+    assert diff.sum() == 1 and diff[0, 0]
+    assert doom[0] != (~acc64[0].any())       # the flip un-dooms job 0
+    assert not doom[1] and (acc[1] == acc64[1]).all()
+    np.testing.assert_array_equal(t2, t)
+
+
+def test_f32_off_boundary_exact_parity():
+    """One ulp of *f32* margin is already enough: nudge the budget a
+    float32 step off the estimate in either direction and both
+    precisions agree everywhere."""
+    from repro.kernels.scheduler_score import scheduler_score
+    qps, pre, q, t, _ = _tie_inputs()
+    for rem0 in (np.float64(np.nextafter(np.float32(50.25),
+                                         np.float32(0.0))),
+                 np.float64(np.nextafter(np.float32(50.25),
+                                         np.float32(100.0)))):
+        t_rem = np.array([rem0, 60.0])
+        acc64 = t_rem[:, None] >= t
+        _, _, _, acc = scheduler_score(
+            qps.astype(np.float32), pre.astype(np.float32),
+            q.astype(np.float32), t_rem.astype(np.float32), bj=8,
+            interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(acc).astype(bool), acc64)
+
+
+# ----------------------------------------------------------------------------
+# zero-job ticks: every scoring backend shares ScoreResult.empty
+
+
+def test_zero_job_score_result_shared_shape(configdict):
+    from repro.core.estimator import ScoreResult
+    workers = [w.name for w in synth_fleet(1, 2, 2)]
+    empty = ScoreResult.empty(workers)
+    assert empty.workers == workers
+    assert empty.t_estimated.shape == (0, len(workers))
+    assert empty.acceptable.shape == (0, len(workers))
+    for arr in (empty.t_remaining, empty.best_worker, empty.urgency,
+                empty.doomed):
+        assert arr.shape == (0,)
+    # the numpy estimator and the pallas v1 backend return the same
+    # shaped empty (the hand-built variant used to drift)
+    for fn in (estimate_matrix, make_pallas_score_fn()):
+        got = fn(configdict, [], workers, now=0.0)
+        assert got.workers == workers
+        assert got.t_estimated.shape == (0, len(workers))
+        assert got.best_worker.shape == (0,)
+
+
+@pytest.mark.parametrize("variant", ["numpy", "uncached", "pallas",
+                                     "pallas-v2", "pallas-resident"])
+def test_zero_job_tick_all_variants(configdict, variant):
+    pol = {
+        "numpy": lambda: SynergAI(),
+        "uncached": lambda: SynergAI(incremental=False),
+        "pallas": lambda: SynergAI(score_fn=make_pallas_score_fn()),
+        "pallas-v2": lambda: SynergAI(
+            score_fn=make_pallas_score_fn(v2=True)),
+        "pallas-resident": lambda: SynergAI(
+            score_fn=make_pallas_score_fn(device_cache=True)),
+    }[variant]()
+    fleet = synth_fleet(1, 2, 2)
+    cluster = Simulator(configdict, pol, fleet=fleet).cluster
+    assert pol.schedule(0.0, [], cluster) == []
+    # and with a queue that empties: the next tick stays well-formed
+    jobs = scenario(configdict, "poisson", n_jobs=4, fleet=fleet,
+                    seed=2)
+    out = pol.schedule(0.0, list(jobs), cluster)
+    assert out                      # something placed on idle workers
+    assert pol.schedule(1.0, [], cluster) == []
