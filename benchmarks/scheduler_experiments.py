@@ -33,6 +33,12 @@ fleet-scale benches:
   mid-trace), and (c) a *correlated-region outage*
   (``synth_failures(regions=..., correlation=...)``: a sampled fraction
   of a region's pools goes down simultaneously).
+* ``bench_overload`` — goodput under 2x sustained overload with
+  flapping regional failures and a WAN partition: uncontrolled vs
+  ``OverloadController`` (doom shedding + per-region queue caps) on the
+  identical trace and fault timeline.  Headline: controlled goodput
+  >= 1.5x uncontrolled at bounded p99 queue depth
+  (``overload_headline``, gated nightly).
 
 Run standalone:  PYTHONPATH=src python benchmarks/scheduler_experiments.py
 (see --help for the fleet/scoring/serving knobs; ``--json`` dumps the
@@ -849,6 +855,111 @@ def bench_energy(cd=None, n_jobs=2000, pools=(2, 5, 5), n_regions=3,
     return blob
 
 
+def bench_overload(cd=None, n_jobs=4000, pools=(2, 5, 5), n_regions=3,
+                   utilization=2.0, patience=8.0, queue_cap=12,
+                   retry_budget=3, smoke=False, emit=print):
+    """Goodput under sustained overload with and without the
+    ``OverloadController`` — the committed ``overload_headline`` the
+    nightly perf gate enforces.
+
+    The fleet is driven at ``utilization`` ~= 2x its capacity (an MMPP
+    trace it can never drain), with flapping regional failures
+    (``synth_failures(..., flap=3)``: pools oscillate between apparent
+    health and crash-restart, killing whatever was placed during the
+    up-phase) and a WAN partition severing one region pair for the
+    middle half of the trace (``LinkFailureEvent`` — no spillover, no
+    cross-region KV).  Clients are impatient (``patience`` x t_qos) and
+    kills retry under an exponential-backoff budget, so both runs reach
+    a terminal outcome for every job.  Two ``HierarchicalSynergAI`` runs
+    of the identical trace and fault timeline:
+
+    - ``uncontrolled`` — no controller: every job is scheduled until it
+      completes (usually violated), abandons, or exhausts its retries.
+      The queue grows without bound and service effort smears across
+      jobs that are already past their deadline.
+    - ``controlled`` — ``OverloadController(queue_cap=...)``: certainly-
+      doomed jobs (``t_rem < min_est``, the score cache's own bound) are
+      shed on sight and each region's queue is capped to the cap-most-
+      schedulable jobs, so servers only run work that can still meet
+      QoS.
+
+    The headline ``goodput_ratio_controlled_vs_uncontrolled`` (within-
+    QoS completions per second, ``metrics.summarize``'s ``goodput_jps``)
+    must hold >= 1.5x with the controlled run's p99 queue depth under
+    ``queue_depth_bound`` — shedding buys *useful* completions, not just
+    a shorter queue.  Deterministic (fixed seeds, no timing in any gated
+    number); ``smoke=True`` shrinks the trace to a seconds-long CI
+    sanity leg (ratios are noise at that size — the smoke leg only
+    proves the bench runs)."""
+    from repro.core.hierarchy import HierarchicalSynergAI
+    from repro.core.metrics import OUTCOMES
+    from repro.core.overload import OverloadController
+    from repro.core.simulator import LinkFailureEvent
+    from repro.core.workers import synth_fleet
+    from repro.core.workload import regional_scenario, synth_failures
+
+    cd = cd or characterize()
+    if smoke:
+        n_jobs = min(n_jobs, 400)
+    fleet = synth_fleet(*pools, regions=n_regions)
+    W = len(fleet)
+    jobs = regional_scenario(cd, "mmpp", n_jobs=n_jobs, fleet=fleet,
+                             utilization=utilization, seed=0,
+                             patience=patience)
+    span = jobs[-1].arrival
+    fails = synth_failures(fleet, span, mtbf_s=span / 2.0,
+                           mttr_s=span / 12.0, seed=0, regions=True,
+                           correlation=0.5, flap=3)
+    links = [LinkFailureEvent("r0", "r1", 0.25 * span, 0.5 * span)]
+    depth_bound = 6 * queue_cap * n_regions
+    blob = {"schema": 1, "bench": "bench_overload", "configs": []}
+    stats = {}
+    for name in ("uncontrolled", "controlled"):
+        ctrl = (OverloadController(queue_cap=queue_cap)
+                if name == "controlled" else None)
+        t0 = time.perf_counter()
+        sim = Simulator(cd, HierarchicalSynergAI(overload=ctrl),
+                        fleet=fleet, failures=fails, link_failures=links,
+                        retry_budget=retry_budget, seed=0)
+        res = sim.run(list(jobs))
+        dt = time.perf_counter() - t0
+        s = summarize(res)
+        p99 = float(np.percentile(sim.queue_depths, 99))
+        stats[name] = (s["goodput_jps"], p99)
+        cfg = {"variant": f"overload-{name}", "J": n_jobs, "W": W,
+               "serving": "job", "regions": n_regions,
+               "utilization": utilization, "goodput_jps": s["goodput_jps"],
+               "queue_depth_p99": p99, "wall_s": dt}
+        for o in OUTCOMES:
+            cfg[o] = s[o]
+        if ctrl is not None:
+            cfg["shed_doom_total"] = ctrl.shed_doom_total
+            cfg["shed_backpressure_total"] = ctrl.shed_backpressure_total
+        blob["configs"].append(cfg)
+        emit(f"overload,{name},J={n_jobs},W={W},"
+             f"goodput_jps={s['goodput_jps']:.3f},depth_p99={p99:.0f},"
+             + ",".join(f"{o}={s[o]}" for o in OUTCOMES)
+             + f",wall_s={dt:.2f}")
+    g_un, _ = stats["uncontrolled"]
+    g_ct, p99_ct = stats["controlled"]
+    ratio = g_ct / max(g_un, 1e-12)
+    for cfg in blob["configs"]:
+        if cfg["variant"] == "overload-controlled":
+            cfg["goodput_ratio_controlled_vs_uncontrolled"] = ratio
+    if not smoke:
+        blob["overload_headline"] = {
+            "J": n_jobs, "W": W, "regions": n_regions,
+            "utilization": utilization, "queue_cap": queue_cap,
+            "goodput_uncontrolled_jps": g_un,
+            "goodput_controlled_jps": g_ct,
+            "goodput_ratio_controlled_vs_uncontrolled": ratio,
+            "queue_depth_p99_controlled": p99_ct,
+            "queue_depth_bound": depth_bound}
+    emit(f"overload_headline,controlled_over_uncontrolled={ratio:.2f}x,"
+         f"depth_p99={p99_ct:.0f}/{depth_bound}")
+    return blob
+
+
 def main(argv=None):
     import argparse
     p = argparse.ArgumentParser(
@@ -919,6 +1030,12 @@ def main(argv=None):
     p.add_argument("--energy-smoke", action="store_true",
                    help="run bench_energy at smoke size only (seconds; "
                         "the tier-1 CI sanity leg)")
+    p.add_argument("--skip-overload", action="store_true",
+                   help="skip the overload-control goodput bench "
+                        "(bench_overload)")
+    p.add_argument("--overload-smoke", action="store_true",
+                   help="run bench_overload at smoke size only (seconds; "
+                        "the tier-1 CI sanity leg)")
     p.add_argument("--json", metavar="PATH", default=None,
                    help="dump the serving/streaming bench summaries as "
                         "JSON (CI artifact)")
@@ -979,6 +1096,15 @@ def main(argv=None):
             sched["configs"].extend(ene["configs"])
             if "energy_headline" in ene:
                 sched["energy_headline"] = ene["energy_headline"]
+    if not args.skip_overload:
+        print("# overload control: controlled vs uncontrolled goodput")
+        ov = bench_overload(cd, smoke=args.overload_smoke)
+        if sched is None:
+            sched = ov
+        else:
+            sched["configs"].extend(ov["configs"])
+            if "overload_headline" in ov:
+                sched["overload_headline"] = ov["overload_headline"]
     if args.sched_json and sched is not None:
         import json
         with open(args.sched_json, "w") as f:

@@ -307,6 +307,23 @@ class RegionRouter:
         the backlog accumulated ahead of them)."""
         self.pressure[self._ri[region]] += 1.0
 
+    def blocked(self, region: str, cluster: Cluster,
+                now: float) -> Optional[np.ndarray]:
+        """[k] bool mask of regions whose WAN link to ``region`` is
+        currently severed (``cluster.partitioned_pairs``), or ``None``
+        when no partition touches ``region`` — the spillover pass must
+        not ship input (or pull KV) across a down link."""
+        pairs = cluster.partitioned_pairs(now)
+        if not pairs:
+            return None
+        blk = np.zeros(len(self.regions), dtype=bool)
+        hit = False
+        for i, r2 in enumerate(self.regions):
+            if r2 != region and frozenset((region, r2)) in pairs:
+                blk[i] = True
+                hit = True
+        return blk if hit else None
+
 
 class HierarchicalSynergAI(Policy):
     """Two-level SynergAI: ``RegionRouter`` over per-region ``SynergAI``
@@ -319,10 +336,17 @@ class HierarchicalSynergAI(Policy):
 
     def __init__(self, score_fn=None, incremental: bool = True,
                  spill: bool = True, recharacterizer=None,
-                 energy_weight: float = 0.0, carbon=None):
+                 energy_weight: float = 0.0, carbon=None,
+                 overload=None):
         self._score_fn = score_fn
         self._incremental = incremental
         self.spill = spill
+        # one shared OverloadController consulted by every per-region
+        # sub-core: each region sheds against its own partition (so
+        # ``queue_cap`` is a per-region bound), the marks pool in the
+        # shared controller, and the simulator drains them once per tick.
+        # None (default) keeps every historical schedule bit-for-bit.
+        self.overload = overload
         # the same energy/carbon knob as flat SynergAI, applied at both
         # levels: every per-region core scores with ``energy_weight`` (and
         # its region's intensity via the CarbonTrace), and the router's
@@ -352,7 +376,8 @@ class HierarchicalSynergAI(Policy):
             sub = self._subs[region] = SynergAI(
                 score_fn=self._score_fn, incremental=self._incremental,
                 recharacterizer=self.recharacterizer,
-                energy_weight=self.energy_weight, carbon=self.carbon)
+                energy_weight=self.energy_weight, carbon=self.carbon,
+                overload=self.overload)
         return sub
 
     def _ensure(self, cluster: Cluster):
@@ -404,6 +429,15 @@ class HierarchicalSynergAI(Policy):
         if len(self._views) > 1:
             # the home region may have just failed — re-route against
             # live aggregates when the job is next seen
+            self.router.home.pop(job.id, None)
+
+    def on_terminal(self, job: Job, cluster: Cluster, now: float):
+        # a shed/abandoned/failed job never re-enters any queue: reclaim
+        # its score-cache row in whichever region core held it (release
+        # is a no-op elsewhere) and drop its routing home
+        for sub in self._subs.values():
+            sub.on_terminal(job, cluster, now)
+        if self.router is not None:
             self.router.home.pop(job.id, None)
 
     # -- the tick --------------------------------------------------------
@@ -513,6 +547,11 @@ class HierarchicalSynergAI(Policy):
             left = [j for j in parts[r] if j.id not in placed]
             if not left:
                 continue
+            # WAN partitions sever the REGION_XFER link: regions cut off
+            # from this home take no spill (input could not ship, and a
+            # decode leg could not pull its KV back across the link)
+            rblk = router.blocked(r, cluster, now)
+            wblk = rblk[rid] if rblk is not None else None
             if len(left) > budget:
                 left = sorted(left, key=lambda j: j.t_qos
                               - (now - j.arrival))[:budget]
@@ -542,6 +581,8 @@ class HierarchicalSynergAI(Policy):
                     t = np.where(qps > 0,
                                  pre + float(j.queries) / qps, np.inf)
                 elig = open_slots & np.isfinite(t) & (rid != ri)
+                if wblk is not None:
+                    elig &= ~wblk
                 if batched:
                     elig &= cluster.admit_engine_mask(
                         j.engine, now, cluster.phase_of(j))

@@ -49,6 +49,17 @@ class Job:
     arrival: float                # submission time
     request: Optional[Request] = None   # token counts (batched serving)
     tenant: str = ""              # traffic class (``TenantSpec.name``)
+    # --- overload-control knobs (all inert by default) ---
+    # ``patience``: absolute seconds of queueing the client tolerates
+    # before hanging up (terminal ``outcome="abandoned"``).  ``None``
+    # means the client waits forever, exactly the historical behavior.
+    patience: Optional[float] = None
+    # ``retry_budget``: per-job override of the simulator-level retry
+    # budget — the number of failure-driven re-executions allowed before
+    # the job is terminally ``outcome="failed"``.  ``None`` defers to
+    # ``Simulator(retry_budget=...)``; when both are ``None`` failures
+    # requeue instantly and forever (historical behavior).
+    retry_budget: Optional[int] = None
 
 
 def exec_time(entry, queries: int) -> float:

@@ -1,7 +1,8 @@
 """Evaluation metrics (paper §5.1): violations, waiting, end-to-end,
 excess time, tail latency, scheduling overhead, energy, placement — plus
-the streaming-QoS view (TTFT/TPOT averages, tails and deadline misses)
-and per-tenant breakdowns."""
+the streaming-QoS view (TTFT/TPOT averages, tails and deadline misses),
+the terminal-outcome taxonomy with goodput (docs/robustness.md), and
+per-tenant breakdowns."""
 
 from __future__ import annotations
 
@@ -11,16 +12,37 @@ import numpy as np
 
 from repro.core.simulator import Cluster, JobResult
 
+#: every terminal state a job can reach (JobResult.outcome refined by
+#: ``outcome_of`` — served results carry ``""`` and split into
+#: completed/violated by the QoS check)
+OUTCOMES = ("completed", "violated", "shed", "abandoned", "failed")
+
+
+def outcome_of(r: JobResult) -> str:
+    """The result's place in the terminal-outcome taxonomy: a non-served
+    result reports its own outcome (``shed`` / ``abandoned`` /
+    ``failed``), a served one refines into ``completed`` or
+    ``violated``."""
+    return r.outcome if r.outcome else (
+        "violated" if r.violated else "completed")
+
 
 def summarize(results: Sequence[JobResult]) -> Dict[str, float]:
-    e2e = np.array([r.e2e for r in results])
-    waiting = np.array([r.waiting for r in results])
-    excess = np.array([r.excess for r in results])
-    overhead = np.array([r.overhead_s + r.decision_s for r in results])
-    violated = np.array([r.violated for r in results])
+    # shed/abandoned/failed jobs were never served: latency statistics
+    # cover the served results only (bit-identical to the historical
+    # summary when every job was served)
+    served = [r for r in results if not r.outcome]
+    counts = {o: 0 for o in OUTCOMES}
+    for r in results:
+        counts[outcome_of(r)] += 1
+    e2e = np.array([r.e2e for r in served] or [0.0])
+    waiting = np.array([r.waiting for r in served] or [0.0])
+    excess = np.array([r.excess for r in served] or [0.0])
+    overhead = np.array([r.overhead_s + r.decision_s for r in served]
+                        or [0.0])
     out = {
         "jobs": len(results),
-        "violations": int(violated.sum()),
+        "violations": counts["violated"],
         "e2e_avg_s": float(e2e.mean()),
         "e2e_min_s": float(e2e.min()),
         "e2e_max_s": float(e2e.max()),
@@ -34,11 +56,23 @@ def summarize(results: Sequence[JobResult]) -> Dict[str, float]:
         "overhead_p99_s": float(np.percentile(overhead, 99)),
         # streaming QoS: deadline misses count even where the metric
         # itself is NaN-guarded away (a NaN never violates)
-        "ttft_violations": sum(r.ttft_violated for r in results),
-        "tpot_violations": sum(r.tpot_violated for r in results),
+        "ttft_violations": sum(r.ttft_violated for r in served),
+        "tpot_violations": sum(r.tpot_violated for r in served),
     }
-    ttft = np.array([r.ttft for r in results])
-    tpot = np.array([r.tpot for r in results])
+    for o in OUTCOMES:
+        out[o] = counts[o]
+    # goodput: within-QoS completions per second of trace span — the
+    # overload-control headline (shedding trades raw throughput for
+    # completions that still mean something to the client)
+    if results:
+        span = (max(r.end for r in results)
+                - min(r.job.arrival for r in results))
+        out["goodput_jps"] = (counts["completed"] / span
+                              if span > 0 else 0.0)
+    else:
+        out["goodput_jps"] = 0.0
+    ttft = np.array([r.ttft for r in served] or [np.inf])
+    tpot = np.array([r.tpot for r in served] or [np.inf])
     if np.isfinite(ttft).any():
         t = ttft[np.isfinite(ttft)]
         out["ttft_avg_s"] = float(t.mean())
@@ -63,6 +97,8 @@ def summarize_by_tenant(results: Sequence[JobResult]
 def placement(results: Sequence[JobResult]) -> Dict[str, float]:
     out: Dict[str, float] = {}
     for r in results:
+        if not r.worker:        # shed/abandoned/failed: never placed
+            continue
         out[r.worker] = out.get(r.worker, 0) + 1
     total = sum(out.values())
     return {w: c / total for w, c in sorted(out.items())}

@@ -73,7 +73,7 @@ class SynergAI(Policy):
 
     def __init__(self, score_fn=None, incremental: bool = True,
                  recharacterizer=None, energy_weight: float = 0.0,
-                 carbon=None):
+                 carbon=None, overload=None):
         # score_fn: optional accelerated scorer — the Eq. 2-4 Pallas
         # kernel, or the fused v2 kernel (``fused`` attribute) which also
         # consumes the depth penalty / phase split / streaming gates.
@@ -93,10 +93,16 @@ class SynergAI(Policy):
         # carbon: optional ``workload.CarbonTrace`` — scales each worker's
         # energy term by its region's *relative* grid intensity at
         # decision time, making the term a carbon term.
+        # overload: an ``overload.OverloadController`` — deadline-aware
+        # load shedding (the cached certain-doom predicate) + queue-depth
+        # admission backpressure, consulted on every scoring pass; the
+        # simulator drains its marks into terminal ``outcome="shed"``
+        # results.  None (default) is bit-for-bit the shed-free scheduler.
         if energy_weight < 0:
             raise ValueError("energy_weight must be >= 0")
         self.energy_weight = float(energy_weight)
         self.carbon = carbon
+        self.overload = overload
         self._regions_key = None
         self._regions: tuple = ()
         self.score_fn = score_fn or estimate_matrix
@@ -141,6 +147,11 @@ class SynergAI(Policy):
                 result, cluster, now,
                 use_default=self.use_default_config)
 
+    def on_terminal(self, job, cluster, now):
+        # reclaim-on-shed: the job never returns, free its cached row now
+        if self.cache is not None:
+            self.cache.release(job.id)
+
     def schedule(self, now, queue, cluster: Cluster) -> List[Assignment]:
         if not queue:
             return []
@@ -149,7 +160,12 @@ class SynergAI(Policy):
             # nothing can start this tick; scoring the whole queue would
             # change no assignment (the placement below only dispatches
             # onto idle workers), so skip the scoring pass — the dominant
-            # cost under fleet-scale backlog.
+            # cost under fleet-scale backlog.  Overload control must keep
+            # shedding here, though: a fully-busy fleet is exactly when
+            # the queue grows, so run the O(J) doom/backpressure pass
+            # against the cached minima without placing anything.
+            if self.overload is not None and self.cache is not None:
+                self._shed_only(now, queue, cluster)
             return []
         if self.cache is not None:
             return self._schedule_cached(now, queue, cluster, avail)
@@ -199,6 +215,12 @@ class SynergAI(Policy):
             min_est = cache.min_estimate(slots)
             urgency = t_rem - min_est
             doomed = t_rem < min_est
+            # the shed consult uses exactly this pre-refinement mask:
+            # pen >= 1 only inflates estimates, so t_rem < min_est is
+            # certain doom under any batch depth — O(1) per shed against
+            # the cached minima
+            shed = (self.overload.consult(now, queue, doomed, urgency)
+                    if self.overload is not None else None)
             if penalized:
                 unsure = ~doomed & (pen[cache.argmin_estimate(slots)]
                                     != 1.0)
@@ -210,7 +232,7 @@ class SynergAI(Policy):
                                     slots, t_rem, urgency, doomed, batched,
                                     pen if penalized else None,
                                     self._carbon_scale(cluster, now)
-                                    if ew else None)
+                                    if ew else None, skip=shed)
         # phases / deadlines re-derive the whole matrix from the cached
         # rows (still no ConfigDict gathers, no per-job Python)
         t = cache.t_matrix(slots)
@@ -245,10 +267,24 @@ class SynergAI(Policy):
             urgency = np.where(has_ttft & (phase != 2),
                                np.minimum(urgency, ttft_slack), urgency)
         doomed = ~acceptable.any(axis=1)
+        # streaming/disaggregated shed predicate: "no acceptable worker
+        # at all" (deadline gates folded in) — the path's own doom mask
+        shed = (self.overload.consult(now, queue, doomed, urgency)
+                if self.overload is not None else None)
         return self._place(now, queue, cluster, avail, t, acceptable,
                            urgency, doomed, batched, phase,
                            self._energy_cost(cache, slots, cluster, now)
-                           if ew else None)
+                           if ew else None, skip=shed)
+
+    def _shed_only(self, now, queue, cluster):
+        """No open slot this tick, but the controller still sheds: decay
+        the cached estimates and consult with the certain-doom mask (the
+        same O(J) quantities the plain tick uses)."""
+        cache = self.cache
+        slots = cache.sync(cluster.cd, queue, cluster)
+        t_rem = cache.t_remaining(slots, now)
+        min_est = cache.min_estimate(slots)
+        self.overload.consult(now, queue, t_rem < min_est, t_rem - min_est)
 
     # -- the weighted energy/carbon term -------------------------------
 
@@ -279,7 +315,8 @@ class SynergAI(Policy):
         return ecost
 
     def _place_lazy(self, now, queue, cluster, avail, cache, slots, t_rem,
-                    urgency, doomed, batched, pen=None, cscale=None):
+                    urgency, doomed, batched, pen=None, cscale=None,
+                    skip=None):
         """Order by (urgency, doomed) and evaluate candidate rows one at
         a time, stopping once every open slot is filled — identical
         assignments to the full masked-argmin pass (same per-row
@@ -301,6 +338,8 @@ class SynergAI(Policy):
         open_slots = avail.copy()
         n_open = int(open_slots.sum())
         for ji in order:
+            if skip is not None and skip[ji]:
+                continue        # marked shed: the simulator drains it
             row = cache.row(slots[ji])
             if pen is not None:
                 row = row * pen
@@ -380,12 +419,23 @@ class SynergAI(Policy):
             slots, t_rem, ttft_rem, cache.tpot_qos(slots),
             cache.dtok(slots), has_ttft, has_tpot, phase, ekey, emask,
             pen, cluster.busy_wait_array(now), avail, escale)
+        # overload control on the device path: the kernel has already
+        # placed, so the host-side consult (cached certain-doom mask)
+        # only filters the emitted assignments — a shed job's slot idles
+        # one tick, which is the price of keeping the kernel unchanged
+        shed = None
+        if self.overload is not None:
+            min_est = cache.min_estimate(slots)
+            shed = self.overload.consult(now, queue, t_rem < min_est,
+                                         t_rem - min_est)
         names = cluster.arrays.names
         cd = cluster.cd
         J = len(queue)
         out: List[Assignment] = []
         for ji in order:        # same emit order as _place's sorted walk
             if ji >= J:
+                continue
+            if shed is not None and shed[ji]:
                 continue
             wi = int(assign[ji])
             if wi >= 0:
@@ -416,10 +466,12 @@ class SynergAI(Policy):
         t, acceptable, urgency, doomed = self.score_fn(
             t0, pre_m, dec_m, t_rem, pen, phase, has_ttft, has_tpot,
             ttft_rem, cache.tpot_qos(slots), cache.dtok(slots))
+        shed = (self.overload.consult(now, queue, doomed, urgency)
+                if self.overload is not None else None)
         return self._place(now, queue, cluster, avail, t, acceptable,
                            urgency, doomed, batched, phase,
                            self._energy_cost(cache, slots, cluster, now)
-                           if self.energy_weight else None)
+                           if self.energy_weight else None, skip=shed)
 
     # ------------------------------------------------------------------
     # reference path: full [J, W] rebuild every tick (incremental=False,
@@ -527,14 +579,17 @@ class SynergAI(Policy):
             scale = self._carbon_scale(cluster, now)
             if scale is not None:
                 ecost = ecost * scale[None, :]
+        shed = (self.overload.consult(now, queue, doomed, urgency)
+                if self.overload is not None else None)
         return self._place(now, queue, cluster, avail, t, acceptable,
-                           urgency, doomed, batched, phase, ecost)
+                           urgency, doomed, batched, phase, ecost,
+                           skip=shed)
 
     # ------------------------------------------------------------------
     # shared placement tail (full-matrix variant)
 
     def _place(self, now, queue, cluster, avail, t, acceptable, urgency,
-               doomed, batched, phase, ecost=None):
+               doomed, batched, phase, ecost=None, skip=None):
         # order: urgent first (2D Ordered Job Queue); doomed jobs last.
         # lexsort is stable, so ties keep queue order like sorted() did.
         order = np.lexsort((urgency, doomed))
@@ -586,7 +641,7 @@ class SynergAI(Policy):
         open_slots = avail.copy()
         n_open = int(open_slots.sum())
         for ji in order:
-            if not live[ji]:
+            if not live[ji] or (skip is not None and skip[ji]):
                 continue
             cand = np.where(open_slots, ranked[ji], np.inf)
             wi = int(cand.argmin())

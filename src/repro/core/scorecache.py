@@ -75,6 +75,7 @@ class ScoreCache:
         self.col_extends = 0
         self.rows_computed = 0
         self.profile_reclaims = 0           # slots dropped by a refresh
+        self.releases = 0                   # slots freed on terminal exit
 
     # ------------------------------------------------------------------
     # storage
@@ -140,6 +141,22 @@ class ScoreCache:
         gone = [jid for jid in self._slot if jid not in keep]
         for jid in gone:
             self._free.append(self._slot.pop(jid))
+
+    def release(self, jid: int) -> bool:
+        """Reclaim-on-shed invalidation rule: a job that reached a
+        *terminal* outcome without completing (shed / abandoned / failed
+        out of its retry budget) never returns to the queue, so its row
+        is freed eagerly instead of waiting for the lazy ``_reclaim``
+        surplus trigger.  Keeping a dead row warm is harmless for
+        correctness but under sustained shedding the surplus would churn
+        the slot pool; this keeps the live-row set tracking the queue.
+        Returns True when a slot was actually freed."""
+        s = self._slot.pop(jid, None)
+        if s is None:
+            return False
+        self._free.append(s)
+        self.releases += 1
+        return True
 
     def _reclaim_profile(self, cd, seen_gen: int):
         """Selective profile invalidation: drop exactly the slots whose

@@ -233,6 +233,7 @@ def batch_stats(cluster) -> Dict[str, Dict[str, float]]:
                 "peak_batch": ws.peak_batch,
                 "prefill_tokens": ws.prefill_tokens,
                 "decoded_tokens": ws.decoded_tokens,
+                "abandoned": ws.abandoned,
             }
     return out
 

@@ -152,6 +152,7 @@ class BatchedWorkerSim(WorkerSim):
     peak_batch: int = 0
     prefill_tokens: int = 0
     decoded_tokens: int = 0
+    abandoned: int = 0
     # WAN-transfer seconds folded into members' service (cross-region
     # input shipping, KV handoffs) still pending their energy re-rate:
     # the chips idle while the wire moves bytes, so ``accrue`` bills the
@@ -253,6 +254,22 @@ class BatchedWorkerSim(WorkerSim):
         self._sync_batch()
         return f
 
+    def abandon(self, jid: int) -> Optional[_InFlight]:
+        """A member's client hung up mid-batch: the member leaves and its
+        partial service is lost.  Tokens only count in ``finish``, so an
+        abandoned member contributes nothing to the worker's token
+        totals — exact token conservation, same rule as a failure kill.
+        Callers must ``accrue(now)`` first and ``_rebatch`` after (the
+        survivors speed up)."""
+        f = self.active.pop(jid, None)
+        if f is not None:
+            self.abandoned += 1
+        if not self.active:
+            self.batch_engine = None
+            self.batch_entry = None
+        self._sync_batch()
+        return f
+
     def on_failure(self, now: float):
         """Worker died: partial service is lost, the batch resets (the
         simulator re-queues every killed member for checkpoint-restart)."""
@@ -317,6 +334,13 @@ class JobResult:
     # service_pred_s`` is therefore exactly ``slowdown * exec noise`` —
     # the drift observable, free of service-model approximation error.
     service_pred_s: float = math.nan
+    # terminal outcome taxonomy (docs/robustness.md).  ``""`` means the
+    # job was actually served — ``metrics.outcome_of`` refines that into
+    # ``"completed"`` / ``"violated"`` from the flags above.  The
+    # overload-control layer writes the non-served outcomes: ``"shed"``
+    # (dropped by the OverloadController), ``"abandoned"`` (client
+    # patience expired in queue), ``"failed"`` (retry budget exhausted).
+    outcome: str = ""
 
 
 @dataclasses.dataclass
@@ -324,6 +348,35 @@ class FailureEvent:
     worker: str
     at: float
     duration: float
+
+
+@dataclasses.dataclass
+class LinkFailureEvent:
+    """A WAN partition between two regions: the ``REGION_XFER`` link
+    connecting regions ``a`` and ``b`` (both directions) is severed for
+    ``[at, at + duration)``.  While active, the hierarchical scheduler
+    masks the pair out of cross-region spillover
+    (``RegionRouter.blocked_regions``) and a disaggregated decode leg
+    trying to pull its KV cache across the dead link loses the cache —
+    the job restarts from prefill under its retry budget.  Intra-region
+    traffic is unaffected; fleets without region tags never see one."""
+
+    a: str
+    b: str
+    at: float
+    duration: float
+
+
+@dataclasses.dataclass
+class RetryEvent:
+    """Bookkeeping for one backoff re-entry scheduled on the event heap
+    (``Simulator.retry_events``): the job re-joins the scan queue at
+    ``at``.  ``attempt`` counts failure-driven re-executions so far (0
+    for an outage-parking entry, which consumes no budget)."""
+
+    job_id: int
+    at: float
+    attempt: int
 
 
 @dataclasses.dataclass
@@ -456,6 +509,11 @@ class Cluster:
         self.disaggregated = serving == "batched" and any(
             ws.pool.role != "both" for ws in self.workers.values())
         self.job_phase: Dict[int, str] = {}
+        # WAN partition timeline (``LinkFailureEvent``, installed by the
+        # Simulator): severed region pairs gate cross-region spillover
+        # and KV pulls while active.  Empty — the default — is free.
+        self.link_outages: List[LinkFailureEvent] = []
+        self._part_memo: tuple = (None, frozenset())
 
     def _make_worker(self, pool: WorkerPool) -> WorkerSim:
         if self.serving == "batched":
@@ -575,6 +633,25 @@ class Cluster:
             ok &= (a.engine_id == -1) | (a.engine_id == eid)
         return ok
 
+    def partitioned_pairs(self, now: float) -> frozenset:
+        """Region pairs (as ``frozenset({a, b})``) whose WAN link is
+        severed at ``now`` — memoized per timestamp, so per-job checks
+        within one scheduler tick cost a dict probe."""
+        memo_t, memo_v = self._part_memo
+        if memo_t == now:
+            return memo_v
+        pairs = frozenset(frozenset((ev.a, ev.b))
+                          for ev in self.link_outages
+                          if ev.at <= now < ev.at + ev.duration)
+        self._part_memo = (now, pairs)
+        return pairs
+
+    def link_down(self, r1: str, r2: str, now: float) -> bool:
+        """Is the REGION_XFER link between two regions severed right now?"""
+        if not self.link_outages or r1 == r2:
+            return False
+        return frozenset((r1, r2)) in self.partitioned_pairs(now)
+
     def idle_workers(self, now: float) -> List[str]:
         return [n for n, w in self.workers.items() if w.idle(now)]
 
@@ -662,6 +739,14 @@ class Policy:
         schedule) is untouched."""
         pass
 
+    def on_terminal(self, job: Job, cluster: Cluster, now: float):
+        """A job left the system *without* completing — shed by the
+        overload controller, abandoned by its client, or failed out of
+        its retry budget.  Stateful policies release per-job state here
+        (SynergAI reclaims the job's ScoreCache row, the hierarchical
+        router drops its home assignment).  Default inert."""
+        pass
+
     def schedule(self, now: float, queue: List[Job], cluster: Cluster
                  ) -> List[Assignment]:
         raise NotImplementedError
@@ -688,6 +773,11 @@ class Simulator:
                  max_batch: int = 8,
                  batch_alpha: Optional[float] = None,
                  engines: Optional[dict] = None,
+                 link_failures: Sequence[LinkFailureEvent] = (),
+                 retry_budget: Optional[int] = None,
+                 retry_base_s: float = 2.0,
+                 retry_jitter: float = 0.5,
+                 elastic_cooldown_s: float = 0.0,
                  seed: int = 0):
         if serving not in ("job", "batched"):
             raise ValueError(f"serving must be 'job' or 'batched', "
@@ -728,12 +818,47 @@ class Simulator:
         # run-to-run execution variance (real inference serving is noisy;
         # schedulers only see profiled expectations).  Lognormal, mean 1.
         self.exec_noise = exec_noise
-        # elastic scaling: clone the strongest pool under queue pressure
+        # elastic scaling: clone the strongest pool under queue pressure.
+        # ``elastic_cooldown_s`` is the scale-down hysteresis window:
+        # clones only retire once the pressure trigger (queue depth >=
+        # threshold) has been quiet that long, so a single flash crowd
+        # doesn't thrash clone/retire cycles.  0.0 — the default — is
+        # the historical retire-on-empty behavior, bit-for-bit.
         self.elastic_max = elastic_max
         self.elastic_threshold = elastic_threshold
         self.provision_s = provision_s
+        self.elastic_cooldown_s = elastic_cooldown_s
         self._clones = 0
         self._clone_names: List[str] = []
+        self._last_pressure = -math.inf
+        self.elastic_clones_total = 0
+        self.elastic_retires_total = 0
+        # ---- overload control / failure hardening (docs/robustness.md),
+        # all inert by default ----
+        # retry budget + exponential backoff: a failure requeue parks the
+        # job on ``self._retry`` for ``retry_base_s * 2^attempt`` seconds
+        # (jittered from the sim RNG — drawn only when the feature is on,
+        # so the historical draw order is untouched) instead of instantly
+        # re-entering the scan queue; budget exhaustion is terminal
+        # ``outcome="failed"``.  ``retry_budget=None`` (and no per-job
+        # override) keeps instant-requeue-forever.
+        self.retry_budget = retry_budget
+        self.retry_base_s = retry_base_s
+        self.retry_jitter = retry_jitter
+        self.link_failures = sorted(link_failures, key=lambda e: e.at)
+        self._retry: list = []              # (ready, seq, job) backoff heap
+        self._parked: set = set()           # job ids currently on _retry
+        self._abandon: list = []            # (deadline, seq, job) patience
+        self._attempts: Dict[int, int] = {}
+        self._terminal: set = set()         # ids with a terminal outcome
+        self._feas_cache: Dict[tuple, list] = {}
+        self.retry_events: List[RetryEvent] = []
+        self._results: Optional[List[JobResult]] = None
+        # per-main-loop-iteration queue depth samples (post-control), the
+        # bounded-p99-depth observable of bench_overload; and the
+        # iteration count, pinned by the outage hot-loop regression test
+        self.queue_depths: List[int] = []
+        self.loop_iters = 0
         self.rng = np.random.default_rng(seed)
         # event heap; None outside run() (and always for LegacySimulator),
         # which turns the _notify hooks into no-ops
@@ -798,6 +923,20 @@ class Simulator:
         self._xfer_s.clear()
         self._handoff = []
         self.cluster.job_phase.clear()
+        # overload-control state (docs/robustness.md)
+        self._retry = []
+        self._parked.clear()
+        self._abandon = []
+        self._attempts.clear()
+        self._terminal.clear()
+        self._feas_cache.clear()
+        self.retry_events = []
+        self.queue_depths = []
+        self._last_pressure = -math.inf
+        self._results = results
+        self.cluster.link_outages = list(self.link_failures)
+        self.cluster._part_memo = (None, frozenset())
+        ctrl = getattr(self.policy, "overload", None)
         for job in pending:
             heapq.heappush(self._heap, (job.arrival, next(self._seq),
                                         _W_ARRIVAL, None))
@@ -832,7 +971,24 @@ class Simulator:
                     job = pending[pi]
                     pi += 1
                     queue.append(job)
+                    if job.patience is not None:
+                        # the client's hang-up clock starts at submission
+                        # and never pauses (retry parking included)
+                        t_ab = job.arrival + job.patience
+                        heapq.heappush(self._abandon,
+                                       (t_ab, next(self._seq), job))
+                        heapq.heappush(self._heap, (t_ab, next(self._seq),
+                                                    _W_ARRIVAL, None))
                     self.policy.on_arrival(job, self.cluster, now)
+                # 1b) backoff re-entries that are due re-join the scan
+                # queue (skipping jobs that meanwhile went terminal)
+                while self._retry and self._retry[0][0] <= now + 1e-12:
+                    _, _, job = heapq.heappop(self._retry)
+                    if job.id not in self._parked:
+                        continue
+                    self._parked.discard(job.id)
+                    queue.append(job)
+                    self.policy.on_requeue(job, self.cluster, now)
                 # 2) worker failures: kill the running job, re-queue it
                 while fi < len(failures) and failures[fi].at <= now + 1e-12:
                     f = failures[fi]
@@ -855,9 +1011,10 @@ class Simulator:
                                 self.cluster.job_phase[jid] = "prefill"
                                 self._xfer_s.pop(jid, None)
                                 self._between.pop(jid, None)
-                            queue.append(rec.job)   # checkpoint-restart
-                            self.policy.on_requeue(rec.job, self.cluster,
-                                                   now)
+                            # checkpoint-restart: instant requeue without
+                            # a retry budget, backoff park (or terminal
+                            # "failed") with one
+                            self._requeue_failed(rec.job, now, queue)
                     if self._disagg:
                         # pull-style staging parks the KV on a "both"
                         # prefill pool until the decode leg is admitted
@@ -932,8 +1089,14 @@ class Simulator:
                 # ones once their transfer lands
                 while self._handoff and self._handoff[0][0] <= now + 1e-12:
                     _, _, job = heapq.heappop(self._handoff)
+                    if job.id in self._terminal:
+                        continue     # abandoned while its KV was in flight
                     queue.append(job)
                     self.policy.on_arrival(job, self.cluster, now)
+                # 3a) client abandonment: queued (or backoff-parked, or
+                # handoff-staged) jobs whose patience expired hang up
+                if self._abandon:
+                    self._abandon_due(now, queue, running, results)
                 # 3b) straggler mitigation (speculative re-dispatch)
                 if self.speculative:
                     self._speculate(now, running)
@@ -955,6 +1118,30 @@ class Simulator:
                 for a in assignments:
                     self._start(a, now, queue, running, first_attempt,
                                 decision_time)
+                # 4b) drain the overload controller's shed decisions
+                # (queued jobs the policy marked certainly-doomed or over
+                # the admission cap): terminal ``outcome="shed"``
+                if ctrl is not None:
+                    for job in ctrl.drain():
+                        if job.id in self._terminal or job.id in running:
+                            continue
+                        try:
+                            queue.remove(job)
+                        except ValueError:
+                            continue    # left the queue some other way
+                        results.append(
+                            self._terminal_result(job, now, "shed"))
+                        self.policy.on_terminal(job, self.cluster, now)
+                # 4c) full-engine outage: a queued job with zero live
+                # pools parks on the backoff heap until the earliest
+                # recovery instead of re-entering scoring every tick.
+                # Gated on retry being configured — parking shifts
+                # head-of-line overhead accounting, so the historical
+                # default stays bit-for-bit.
+                if (not assignments and queue
+                        and self.retry_budget is not None):
+                    self._park_outage_victims(now, queue)
+                self.queue_depths.append(len(queue))
                 # 5) advance time to the next indexed wake-up
                 nxt = self._next_wake(now, queue, running)
                 if nxt is math.inf and not running and queue:
@@ -966,6 +1153,8 @@ class Simulator:
                 now = max(now, nxt)
         finally:
             self._heap = None
+            self._results = None
+            self.loop_iters = guard
         # settle the idle/static power floor over the run's span: parked
         # seconds burn each pool's cheapest idle draw.  Kept out of
         # ``energy_j`` (active energy, the Fig. 12 series) but it is what
@@ -976,6 +1165,145 @@ class Simulator:
             w.idle_energy_j += (w.pool.idle_power_w
                                 * max(0.0, span - w.busy_s))
         return results
+
+    # ------------------------------------------------------------------
+    # overload control / failure hardening (docs/robustness.md)
+
+    def _terminal_result(self, job: Job, now: float,
+                         outcome: str) -> JobResult:
+        """Close a job out with a terminal non-completion outcome
+        (``failed`` / ``abandoned`` / ``shed``) and release its serving
+        state.  A disaggregated job keeps its prefill-leg record (that
+        service really ran) with the terminal outcome stamped on it."""
+        jid = job.id
+        self._terminal.add(jid)
+        self._parked.discard(jid)
+        self._xfer_s.pop(jid, None)
+        self.cluster.job_phase.pop(jid, None)
+        rec = self._between.pop(jid, None)
+        wait = max(0.0, now - job.arrival)
+        if rec is None:
+            rec = JobResult(job, "", "", now, now, wait, 0.0, wait,
+                            False, 0.0, 0.0, 0.0)
+        else:
+            rec.end = now
+            rec.e2e = wait
+            rec.violated = False
+            rec.excess = 0.0
+        rec.outcome = outcome
+        return rec
+
+    def _park(self, job: Job, ready: float, attempt: int):
+        """Put a job on the backoff heap until ``ready`` (with a matching
+        event-heap wake, so the main loop never tick-scans for it)."""
+        heapq.heappush(self._retry, (ready, next(self._seq), job))
+        self._parked.add(job.id)
+        self.retry_events.append(RetryEvent(job.id, ready, attempt))
+        if self._heap is not None:
+            heapq.heappush(self._heap, (ready, next(self._seq),
+                                        _W_ARRIVAL, None))
+
+    def _requeue_failed(self, job: Job, now: float, queue: List[Job]):
+        """A failure killed this job's execution.  Without a retry budget
+        (the historical default) it re-enters the scan queue instantly;
+        with one, the re-entry backs off exponentially
+        (``retry_base_s * 2^attempt``, jittered from the sim RNG) and
+        budget exhaustion is terminal ``outcome="failed"``."""
+        budget = (job.retry_budget if job.retry_budget is not None
+                  else self.retry_budget)
+        if budget is None:
+            queue.append(job)
+            self.policy.on_requeue(job, self.cluster, now)
+            return
+        att = self._attempts.get(job.id, 0)
+        if att >= budget:
+            self._results.append(self._terminal_result(job, now, "failed"))
+            self.policy.on_terminal(job, self.cluster, now)
+            return
+        self._attempts[job.id] = att + 1
+        delay = self.retry_base_s * (2.0 ** att)
+        if self.retry_jitter:
+            delay *= 1.0 + self.retry_jitter * float(self.rng.random())
+        self._park(job, now + delay, att + 1)
+
+    def _abandon_due(self, now: float, queue: List[Job],
+                     running: Dict[int, JobResult],
+                     results: List[JobResult]):
+        """Expired-patience sweep.  A job abandons while queued, parked
+        on the backoff heap, or staged between disaggregated phases; a
+        running batched member abandons only before its first decoded
+        token (the client saw nothing yet) — it leaves the batch without
+        counting tokens and the survivors speed up.  Jobs already
+        streaming (or in exclusive job-mode service) are committed."""
+        while self._abandon and self._abandon[0][0] <= now + 1e-12:
+            _, _, job = heapq.heappop(self._abandon)
+            jid = job.id
+            if jid in self._terminal:
+                continue
+            if jid in running:
+                rec = running[jid]
+                w = self.cluster.workers.get(rec.worker)
+                if isinstance(w, BatchedWorkerSim) and jid in w.active:
+                    w.accrue(now)
+                    f = w.active.get(jid)
+                    if f is not None and f.prefill_done_at is None:
+                        w.abandon(jid)
+                        del running[jid]
+                        results.append(
+                            self._terminal_result(job, now, "abandoned"))
+                        self.policy.on_terminal(job, self.cluster, now)
+                        self._rebatch(w, now, running)
+                continue
+            in_queue = any(q.id == jid for q in queue)
+            staged = jid in self._between       # KV handoff in flight
+            if not (in_queue or jid in self._parked or staged):
+                continue                        # already completed
+            if in_queue:
+                queue[:] = [q for q in queue if q.id != jid]
+            results.append(self._terminal_result(job, now, "abandoned"))
+            self.policy.on_terminal(job, self.cluster, now)
+
+    def _feasible_pools(self, engine: str) -> List[str]:
+        # feasibility is static per (engine, fleet membership): clones
+        # share their base pool's profile rows
+        key = (engine, self.cluster._member_gen,
+               self.policy.use_default_config)
+        hit = self._feas_cache.get(key)
+        if hit is None:
+            use_default = self.policy.use_default_config
+            hit = self._feas_cache[key] = [
+                n for n in self.cluster.workers
+                if self.cluster.feasible(engine, n, use_default)]
+        return hit
+
+    def _park_outage_victims(self, now: float, queue: List[Job]):
+        """Full-engine outage parking: a queued job every one of whose
+        feasible pools is failed parks on the backoff heap until the
+        earliest recovery (no budget consumed — nothing *killed* it), so
+        a dead engine costs O(1) wakes instead of a tick-scan per second
+        of outage."""
+        until: Dict[str, float] = {}
+        for job in list(queue):
+            t = until.get(job.engine)
+            if t is None:
+                t = 0.0
+                names = self._feasible_pools(job.engine)
+                if names:
+                    workers = self.cluster.workers
+                    t = math.inf
+                    for n in names:
+                        fu = workers[n].failed_until
+                        if fu <= now:
+                            t = 0.0      # a live pool exists
+                            break
+                        t = min(t, fu)
+                    if t is math.inf:    # engine feasible nowhere: leave
+                        t = 0.0          # queued so "stuck" still trips
+                until[job.engine] = t
+            if t > now:
+                queue.remove(job)
+                self._park(job, t + 1e-9,
+                           self._attempts.get(job.id, 0))
 
     def _speculate(self, now: float, running: Dict[int, "JobResult"]):
         use_default = self.policy.use_default_config
@@ -1076,9 +1404,12 @@ class Simulator:
         (provisioning delay applies); retire idle clones once pressure
         subsides.  Only clones created here are ever retired, so synthetic
         fleet members (also named ``base__k``) are left alone."""
+        if len(queue) >= self.elastic_threshold:
+            self._last_pressure = now       # hysteresis clock restarts
         if (len(queue) >= self.elastic_threshold
                 and self._clones < self.elastic_max):
             self._clones += 1
+            self.elastic_clones_total += 1
             base = self._elastic_base(now)
             # reuse retired slot numbers (bounded by elastic_max) so the
             # estimator's per-worker-tuple row cache cycles through a small
@@ -1093,7 +1424,11 @@ class Simulator:
             self.cluster.workers[name] = clone
             self._clone_names.append(name)
             self._notify_worker_free(name, clone.busy_until)
-        elif not queue:
+        elif (not queue
+              and now - self._last_pressure >= self.elastic_cooldown_s):
+            # scale-down hysteresis: the pressure trigger must have been
+            # quiet for the cooldown window (0.0 default = retire as soon
+            # as the queue drains, the historical behavior)
             for name in list(self._clone_names):
                 ws = self.cluster.workers[name]
                 # a batched clone is "idle" whenever it has a free slot —
@@ -1102,6 +1437,7 @@ class Simulator:
                     del self.cluster.workers[name]
                     self._clone_names.remove(name)
                     self._clones -= 1
+                    self.elastic_retires_total += 1
 
     def _start(self, a: Assignment, now: float, queue, running,
                first_attempt, decision_time):
@@ -1227,9 +1563,27 @@ class Simulator:
             # KV/slot budget, or phase-role); the job stays queued
             first_attempt.setdefault(a.job.id, now)
             return
-        queue.remove(a.job)
         phase = (self.cluster.job_phase.get(a.job.id, "prefill")
                  if self._disagg else "full")
+        if phase == "decode":
+            brec = self._between.get(a.job.id)
+            pws = (self.cluster.workers.get(brec.prefill_worker)
+                   if brec is not None else None)
+            if (pws is not None and a.worker != brec.prefill_worker
+                    and pws.pool.region != w.pool.region
+                    and self.cluster.link_down(pws.pool.region,
+                                               w.pool.region, now)):
+                # WAN partition: the cross-region KV pull dies on the
+                # severed link and the parked cache is unreachable — the
+                # in-flight handoff is lost and the job restarts from
+                # prefill under its retry budget
+                queue.remove(a.job)
+                self.cluster.job_phase[a.job.id] = "prefill"
+                self._xfer_s.pop(a.job.id, None)
+                self._between.pop(a.job.id, None)
+                self._requeue_failed(a.job, now, queue)
+                return
+        queue.remove(a.job)
         spec = self._engines[a.job.engine]
         prof = batch_profile(a.entry, spec, w.pool)
         req = a.job.request

@@ -33,7 +33,9 @@ the ``synth_fleet`` clusters are built for:
 * ``synth_failures``       — Poisson worker failures / exponential repair;
   ``regions=`` + ``correlation=`` group pools into regions with
   correlated outage windows (one event downs a sampled fraction of a
-  region simultaneously — shared-infrastructure edge outages).
+  region simultaneously — shared-infrastructure edge outages);
+  ``flap=`` splits every outage into crash-restart pulses (flapping
+  pools, the retry-budget stress case).
 """
 
 from __future__ import annotations
@@ -387,6 +389,11 @@ class TenantSpec:
     start_at: float = 0.0
     ttft_scale: Optional[float] = None    # x streaming_threshold ttft
     tpot_scale: Optional[float] = None    # x streaming_threshold tpot
+    # client patience as a multiple of each job's QoS budget: a queued
+    # job abandons (terminal outcome "abandoned") after
+    # ``patience_scale * t_qos`` seconds of waiting.  None (default)
+    # waits forever — the historical behaviour.
+    patience_scale: Optional[float] = None
 
 
 def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
@@ -431,8 +438,10 @@ def make_workload(cd: ConfigDict, tenants: Sequence[TenantSpec],
             engine = names[int(ei)]
             t_qos = tenant.qos_scale * qos_threshold(
                 cd, engine, int(q), tenant.qos_percentile)
+            patience = (tenant.patience_scale * float(t_qos)
+                        if tenant.patience_scale is not None else None)
             jobs.append(Job(0, engine, int(q), float(t_qos), float(at),
-                            tenant=tenant.name))
+                            tenant=tenant.name, patience=patience))
     jobs.sort(key=lambda j: j.arrival)
     for i, j in enumerate(jobs):
         j.id = i
@@ -576,7 +585,8 @@ def region_rates(cd: ConfigDict, fleet: Sequence[WorkerPool],
 def regional_scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
                       fleet: Optional[Sequence[WorkerPool]] = None,
                       utilization: float = 0.7, seed: int = 0,
-                      serving: str = "job", streaming=None) -> List[Job]:
+                      serving: str = "job", streaming=None,
+                      patience: Optional[float] = None) -> List[Job]:
     """Multi-region traffic for a tagged fleet: one independent
     ``scenario`` stream per region, each calibrated (rate *and* engine
     mix) against that region's own pools, merged by arrival time with
@@ -590,7 +600,8 @@ def regional_scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
     if len(groups) <= 1:
         return scenario(cd, kind, n_jobs=n_jobs, fleet=fleet,
                         utilization=utilization, seed=seed,
-                        serving=serving, streaming=streaming)
+                        serving=serving, streaming=streaming,
+                        patience=patience)
     rates = region_rates(cd, fleet, utilization)
     total = sum(rates.values())
     names = list(groups)
@@ -609,7 +620,7 @@ def regional_scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
         jobs.extend(scenario(cd, kind, n_jobs=n_r, fleet=groups[r],
                              utilization=utilization,
                              seed=seed + 7919 * (i + 1), serving=serving,
-                             streaming=streaming))
+                             streaming=streaming, patience=patience))
     jobs.sort(key=lambda j: j.arrival)
     for i, j in enumerate(jobs):
         j.id = i
@@ -642,7 +653,8 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
              fleet: Optional[Sequence[WorkerPool]] = None,
              utilization: float = 0.7, seed: int = 0,
              serving: str = "job",
-             streaming=None) -> List[Job]:
+             streaming=None,
+             patience: Optional[float] = None) -> List[Job]:
     """Named fleet-scale scenarios over the engine catalogue, calibrated to
     ``utilization`` of the given fleet (default: the 3-pool paper fleet).
     ``kind="drift"`` adds engine-popularity drift: the capacity-
@@ -657,6 +669,11 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
     ``streaming=(ttft_scale, tpot_scale)`` stamps every tenant with those
     streaming-SLO scales (per-class control wants explicit ``TenantSpec``
     + ``make_workload`` + ``attach_requests``); batched serving only.
+
+    ``patience=`` stamps every tenant with that ``patience_scale``: each
+    job abandons after ``patience * t_qos`` seconds of queueing
+    (``JobResult.outcome == "abandoned"``).  ``None`` (default) waits
+    forever — bit-for-bit the historical traces.
     """
     if serving not in ("job", "batched"):
         raise ValueError(f"serving must be 'job' or 'batched', "
@@ -754,6 +771,9 @@ def scenario(cd: ConfigDict, kind: str, n_jobs: int = 10_000,
         tenants = [dataclasses.replace(t, ttft_scale=ttft_scale,
                                        tpot_scale=tpot_scale)
                    for t in tenants]
+    if patience is not None:
+        tenants = [dataclasses.replace(t, patience_scale=patience)
+                   for t in tenants]
     jobs = make_workload(cd, tenants, seed=seed)
     if serving == "batched":
         attach_requests(jobs, seed=seed, cd=cd, tenants=tenants)
@@ -771,6 +791,10 @@ def _job_record(job: Job) -> dict:
     rec = {"id": job.id, "arrival": job.arrival, "engine": job.engine,
            "queries": job.queries, "t_qos": job.t_qos,
            "tenant": job.tenant}
+    if job.patience is not None:
+        rec["patience"] = job.patience
+    if job.retry_budget is not None:
+        rec["retry_budget"] = job.retry_budget
     if job.request is not None:
         r = job.request
         rec["prompt_tokens"] = r.prompt_tokens
@@ -850,7 +874,12 @@ def load_trace(path) -> List[Job]:
             jobs.append(Job(int(rec["id"]), str(rec["engine"]),
                             int(rec["queries"]), float(rec["t_qos"]),
                             float(rec["arrival"]), request=request,
-                            tenant=str(rec.get("tenant", ""))))
+                            tenant=str(rec.get("tenant", "")),
+                            patience=(float(rec["patience"])
+                                      if "patience" in rec else None),
+                            retry_budget=(int(rec["retry_budget"])
+                                          if "retry_budget" in rec
+                                          else None)))
         except (KeyError, TypeError, ValueError) as e:
             raise _trace_error(path, lineno,
                                f"bad job record ({e!r})") from None
@@ -1051,10 +1080,30 @@ def _failure_regions(fleet: Sequence[WorkerPool],
                      f"got {regions!r}")
 
 
+def _flap_events(events: List[FailureEvent],
+                 flap: int) -> List[FailureEvent]:
+    """Crash-restart flapping: split each outage window into ``flap``
+    short pulses at 50% duty cycle — pulse ``i`` covers
+    ``[at + i*d/flap, at + i*d/flap + 0.5*d/flap)``.  Same envelope,
+    same pool, but every pulse kills and requeues whatever was placed
+    during the preceding half-window of apparent health (the
+    retry-budget stress case)."""
+    if flap <= 1:
+        return events
+    out: List[FailureEvent] = []
+    for e in events:
+        step = e.duration / flap
+        for i in range(flap):
+            out.append(FailureEvent(e.worker, e.at + i * step,
+                                    0.5 * step))
+    return sorted(out, key=lambda f: f.at)
+
+
 def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
                    mtbf_s: float, mttr_s: float, seed: int = 0,
                    regions=None,
-                   correlation: float = 0.5) -> List[FailureEvent]:
+                   correlation: float = 0.5,
+                   flap: Optional[int] = None) -> List[FailureEvent]:
     """Synthetic failure traces for fleet-scale robustness runs (the
     simulator re-queues killed jobs).
 
@@ -1070,7 +1119,14 @@ def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
     ``max(1, round(correlation * len(region)))`` of the region's pools
     *simultaneously* for one shared exponential repair window.  A
     region's next outage is drawn after the previous repair completes,
-    so no pool's failure windows ever overlap."""
+    so no pool's failure windows ever overlap.
+
+    ``flap=k`` (k > 1) turns every outage into a flapping pool: the
+    window is split into ``k`` crash-restart pulses at 50% duty cycle
+    (see ``_flap_events``), so pools oscillate between apparent health
+    and failure instead of staying down — jobs placed during the
+    up-phases get killed and requeued repeatedly, stressing retry
+    budgets.  ``None``/``1`` keeps the seed-identical solid windows."""
     rng = np.random.default_rng(seed)
     events: List[FailureEvent] = []
     if regions is None or regions is False:    # False == off, like
@@ -1082,7 +1138,8 @@ def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
                 d = rng.exponential(mttr_s)
                 events.append(FailureEvent(w.name, float(t), float(d)))
                 t += d + rng.exponential(mtbf_s)
-        return sorted(events, key=lambda f: f.at)
+        events.sort(key=lambda f: f.at)
+        return _flap_events(events, flap) if flap else events
     if not 0.0 < correlation <= 1.0:
         raise ValueError(f"correlation must be in (0, 1], "
                          f"got {correlation}")
@@ -1097,7 +1154,8 @@ def synth_failures(fleet: Sequence[WorkerPool], horizon_s: float,
             for i in sorted(down):
                 events.append(FailureEvent(pools[i], float(t), float(d)))
             t += d + rng.exponential(mtbf_s)
-    return sorted(events, key=lambda f: f.at)
+    events.sort(key=lambda f: f.at)
+    return _flap_events(events, flap) if flap else events
 
 
 def synth_degradations(fleet: Sequence[WorkerPool], horizon_s: float,

@@ -1,0 +1,574 @@
+"""Overload control & failure-domain hardening (docs/robustness.md):
+retry budgets with exponential backoff, client abandonment, deadline-
+aware load shedding + admission backpressure, WAN partition injection,
+flapping failure traces, outage parking (the infinite-requeue fix),
+elastic scale-down hysteresis, the terminal-outcome taxonomy with
+goodput, trace round-trip of the new job fields, and the bench_overload
+smoke schema.  Everything defaults off: the first test pins the
+controller-free schedule bit-for-bit against the feature-bearing build.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from conftest import given, settings, st
+from test_trace_replay import _result_key
+
+from repro.core.hierarchy import HierarchicalSynergAI
+from repro.core.job import Job, Request
+from repro.core.metrics import OUTCOMES, outcome_of, summarize
+from repro.core.overload import OverloadController
+from repro.core.scheduler import SynergAI
+from repro.core.simulator import (FailureEvent, JobResult,
+                                  LinkFailureEvent, RetryEvent, Simulator)
+from repro.core.workers import synth_fleet
+from repro.core.workload import (load_trace, regional_scenario, save_trace,
+                                 scenario, synth_failures)
+
+ENGINE = "gemma-2b/bf16"
+
+
+# ---------------------------------------------------------------------------
+# defaults-off equivalence
+
+
+def test_inert_controller_is_bitforbit(configdict):
+    """A controller that never sheds (shed_doomed=False, no cap) leaves
+    the schedule bit-for-bit identical to no controller at all."""
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=60, fleet=fleet, seed=7,
+                    utilization=1.2)
+    plain = Simulator(configdict, SynergAI(), fleet=fleet,
+                      seed=7).run(list(jobs))
+    jobs2 = scenario(configdict, "mmpp", n_jobs=60, fleet=fleet, seed=7,
+                     utilization=1.2)
+    ctrl = OverloadController(shed_doomed=False)
+    wired = Simulator(configdict, SynergAI(overload=ctrl), fleet=fleet,
+                      seed=7).run(list(jobs2))
+    assert _result_key(plain) == _result_key(wired)
+    assert all(r.outcome == "" for r in wired)
+    assert ctrl.shed_doom_total == 0 and ctrl.shed_backpressure_total == 0
+
+
+def test_retry_knobs_off_are_bitforbit(configdict):
+    """retry_budget=None + no patience reproduces the historical failure
+    requeue stream exactly (same RNG draw order, same results)."""
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=60, fleet=fleet, seed=3)
+    span = jobs[-1].arrival
+    fails = synth_failures(fleet, span, mtbf_s=span / 2, mttr_s=span / 8,
+                           seed=5)
+    a = Simulator(configdict, SynergAI(), fleet=fleet, failures=fails,
+                  seed=3).run(list(jobs))
+    jobs2 = scenario(configdict, "mmpp", n_jobs=60, fleet=fleet, seed=3)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, failures=fails,
+                    seed=3, elastic_cooldown_s=0.0)
+    b = sim.run(list(jobs2))
+    assert _result_key(a) == _result_key(b)
+    assert sim.retry_events == [] and all(r.outcome == "" for r in b)
+
+
+# ---------------------------------------------------------------------------
+# retry budgets + exponential backoff
+
+
+def test_backoff_doubles_and_budget_exhausts(configdict):
+    """Each budget-consuming retry waits retry_base_s * 2^attempt (exact
+    with jitter off); exhaustion is terminal outcome='failed'."""
+    fleet = synth_fleet(1, 1, 1)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, retry_budget=3,
+                    retry_base_s=2.0, retry_jitter=0.0)
+    sim._results = []
+    job = Job(0, ENGINE, 500, 60.0, 0.0)
+    q = []
+    sim._requeue_failed(job, 100.0, q)
+    sim._requeue_failed(job, 110.0, q)
+    sim._requeue_failed(job, 120.0, q)
+    assert sim.retry_events == [RetryEvent(0, 102.0, 1),
+                                RetryEvent(0, 114.0, 2),
+                                RetryEvent(0, 128.0, 3)]
+    assert not q and job.id in sim._parked
+    # fourth kill: budget (3) exhausted -> terminal failure
+    sim._requeue_failed(job, 130.0, q)
+    assert len(sim._results) == 1
+    r = sim._results[0]
+    assert r.outcome == "failed" and r.end == 130.0 and r.worker == ""
+    assert outcome_of(r) == "failed"
+
+
+def test_backoff_jitter_bounded_by_knob(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, retry_budget=5,
+                    retry_base_s=2.0, retry_jitter=0.5)
+    sim._results = []
+    for i in range(4):
+        sim._requeue_failed(Job(i, ENGINE, 500, 60.0, 0.0), 0.0, [])
+    for ev in sim.retry_events:         # all attempt 1: delay = 2 * u
+        assert 2.0 <= ev.at <= 3.0
+
+    # per-job budget overrides the simulator-wide budget
+    strict = Job(9, ENGINE, 500, 60.0, 0.0, retry_budget=0)
+    sim._requeue_failed(strict, 50.0, [])
+    assert sim._results and sim._results[-1].outcome == "failed"
+
+
+def test_killed_job_retries_through_flap_or_fails(configdict):
+    """End-to-end: a retry budget under flapping failures yields only
+    terminal outcomes — completed/violated after surviving retries, or
+    'failed' past the budget; nothing is lost or duplicated."""
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "mmpp", n_jobs=80, fleet=fleet, seed=3)
+    span = jobs[-1].arrival
+    fails = synth_failures(fleet, span, mtbf_s=span / 4, mttr_s=span / 6,
+                           seed=7, flap=3)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, failures=fails,
+                    seed=3, retry_budget=2, retry_base_s=1.0)
+    res = sim.run(jobs)
+    assert len(res) == 80
+    assert sorted(r.job.id for r in res) == list(range(80))
+    assert {outcome_of(r) for r in res} <= set(OUTCOMES)
+    assert sim.retry_events        # the flap actually exercised retries
+    assert all(ev.attempt <= 2 for ev in sim.retry_events
+               if ev.attempt > 0)
+
+
+# ---------------------------------------------------------------------------
+# outage parking (the infinite-requeue hot loop)
+
+
+def test_full_outage_parks_instead_of_hot_looping(configdict):
+    """During a full-fleet outage, queued jobs park on the backoff heap:
+    the loop stops burning a tick per second of outage.  The tick count
+    is pinned well below the outage length; the no-budget run (the
+    historical hot loop) scans through it."""
+    fleet = synth_fleet(1, 1, 1)
+    outage = [FailureEvent(w.name, 5.0, 2_000.0) for w in fleet]
+    jobs = [Job(i, ENGINE, 500, 1e6, float(i)) for i in range(4)]
+
+    hot = Simulator(configdict, SynergAI(), fleet=fleet, failures=outage,
+                    seed=0)
+    res_hot = hot.run([dataclasses.replace(j) for j in jobs])
+    parked = Simulator(configdict, SynergAI(), fleet=fleet,
+                       failures=outage, seed=0, retry_budget=8)
+    res_parked = parked.run([dataclasses.replace(j) for j in jobs])
+
+    assert len(res_hot) == len(res_parked) == 4
+    assert all(r.outcome == "" for r in res_parked)
+    assert hot.loop_iters > 1_000          # one scan per tick of outage
+    assert parked.loop_iters < 100         # O(1) wakes per parked job
+    # the park targeted the outage end, not a backoff-sized nap
+    assert any(ev.at >= 2_000.0 for ev in parked.retry_events)
+
+
+# ---------------------------------------------------------------------------
+# client abandonment
+
+
+def test_queued_job_abandons_at_patience(configdict):
+    fleet = synth_fleet(1, 0, 0)
+    long_j = Job(0, ENGINE, 20_000, 1e6, 0.0)
+    waiter = Job(1, ENGINE, 500, 1e6, 1.0, patience=3.5)
+    pol = SynergAI()
+    res = Simulator(configdict, pol, fleet=fleet,
+                    seed=0).run([long_j, waiter])
+    by = {r.job.id: r for r in res}
+    assert by[0].outcome == "" and by[0].worker == "cloud-pod"
+    r = by[1]
+    assert r.outcome == "abandoned" and outcome_of(r) == "abandoned"
+    assert r.worker == "" and not r.violated
+    assert r.end == pytest.approx(1.0 + 3.5)
+    assert r.waiting == pytest.approx(3.5) and r.e2e == r.waiting
+    # no stale score-cache row survives the abandonment
+    assert pol.cache is None or 1 not in pol.cache._slot
+
+
+def test_batched_member_abandons_only_before_first_token(configdict):
+    """A batched member whose client hangs up mid-prefill leaves the
+    batch and counts zero tokens; one already streaming is committed
+    and completes.  Token totals cover exactly the served members."""
+    fleet = synth_fleet(1, 0, 0)
+    stream = Job(0, ENGINE, 500, 1e6, 0.0, request=Request(200, 50_000))
+    # huge prompt: still prefilling when patience expires at t=2.0
+    mid_prefill = Job(1, ENGINE, 500, 1e6, 0.5, patience=1.5,
+                      request=Request(4_000_000, 100))
+    sim = Simulator(configdict, SynergAI(), fleet=fleet,
+                    serving="batched", seed=0)
+    res = sim.run([stream, mid_prefill])
+    by = {r.job.id: r for r in res}
+    assert by[0].outcome == "" and not by[0].violated
+    assert by[1].outcome == "abandoned"
+    assert by[1].end == pytest.approx(0.5 + 1.5)
+    ws = sim.cluster.workers["cloud-pod"]
+    assert ws.abandoned == 1
+    # exact token conservation: only the finished member's tokens count
+    assert ws.prefill_tokens == 200 and ws.decoded_tokens == 50_000
+
+
+def test_committed_batched_member_never_abandons(configdict):
+    """Patience expiring after the first token no longer abandons — the
+    client is already streaming."""
+    fleet = synth_fleet(1, 0, 0)
+    job = Job(0, ENGINE, 500, 1e6, 0.0, patience=5.0,
+              request=Request(100, 500_000))  # tiny prefill, long decode
+    sim = Simulator(configdict, SynergAI(), fleet=fleet,
+                    serving="batched", seed=0)
+    res = sim.run([job])
+    assert res[0].outcome == "" and res[0].end > 5.0
+    assert sim.cluster.workers["cloud-pod"].abandoned == 0
+
+
+def test_scenario_patience_stamps_jobs(configdict):
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "poisson", n_jobs=20, fleet=fleet,
+                    seed=0, patience=2.0)
+    assert all(j.patience == pytest.approx(2.0 * j.t_qos) for j in jobs)
+    plain = scenario(configdict, "poisson", n_jobs=20, fleet=fleet,
+                     seed=0)
+    assert all(j.patience is None for j in plain)
+    # patience doesn't perturb the sampled trace itself
+    assert [(j.arrival, j.engine, j.t_qos) for j in jobs] == \
+           [(j.arrival, j.engine, j.t_qos) for j in plain]
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware shedding + admission backpressure
+
+
+def test_certainly_doomed_job_is_shed(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    doomed = Job(0, ENGINE, 500, 1e-6, 0.0)    # cannot meet QoS anywhere
+    served = Simulator(configdict, SynergAI(), fleet=fleet,
+                       seed=0).run([dataclasses.replace(doomed)])
+    assert served[0].outcome == "" and served[0].violated
+    pol = SynergAI(overload=OverloadController())
+    shed = Simulator(configdict, pol,
+                     fleet=fleet, seed=0).run([dataclasses.replace(doomed)])
+    assert shed[0].outcome == "shed" and not shed[0].violated
+    assert shed[0].worker == "" and outcome_of(shed[0]) == "shed"
+    # the scored row was reclaimed eagerly on the terminal exit
+    assert pol.cache is None or (pol.cache.releases >= 1
+                                 and 0 not in pol.cache._slot)
+
+
+def test_shed_fires_even_with_no_open_slot(configdict):
+    """The no-availability early return still consults the controller:
+    a doomed job sheds while every pool is busy instead of aging."""
+    fleet = synth_fleet(1, 0, 0)
+    long_j = Job(0, ENGINE, 20_000, 1e6, 0.0)
+    doomed = Job(1, ENGINE, 500, 1e-6, 1.0)
+    res = Simulator(configdict, SynergAI(overload=OverloadController()),
+                    fleet=fleet, seed=0).run([long_j, doomed])
+    by = {r.job.id: r for r in res}
+    assert by[1].outcome == "shed"
+    assert by[1].end < by[0].end       # shed while the pool was busy
+
+
+def test_queue_cap_bounds_depth(configdict):
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "flash", n_jobs=250, fleet=fleet,
+                    utilization=2.5, seed=3)
+    ctrl = OverloadController(queue_cap=10)
+    sim = Simulator(configdict, SynergAI(overload=ctrl), fleet=fleet,
+                    seed=1)
+    res = sim.run(jobs)
+    assert len(res) == 250
+    assert ctrl.shed_backpressure_total > 0
+    depths = np.asarray(sim.queue_depths)
+    # depth is sampled post-drain each tick; the cap holds up to the
+    # arrivals that landed after the tick's consult
+    assert float(np.percentile(depths, 99)) <= 4 * 10
+    s = summarize(res)
+    assert s["shed"] == sum(1 for r in res if r.outcome == "shed") > 0
+    assert s["jobs"] == 250
+
+
+def test_controller_counts_doom_vs_backpressure():
+    ctrl = OverloadController(queue_cap=2)
+    queue = [Job(i, ENGINE, 500, 60.0, 0.0) for i in range(5)]
+    doomed = np.array([True, False, False, False, False])
+    urgency = np.array([0.0, 3.0, 1.0, 2.0, 4.0])
+    shed = ctrl.consult(0.0, queue, doomed, urgency)
+    # doom shed: job 0; cap keeps the 2 most schedulable of the rest
+    # (urgency order 2, 3) and sheds jobs 1 and 4
+    assert shed.tolist() == [True, True, False, False, True]
+    assert ctrl.shed_doom_total == 1
+    assert ctrl.shed_backpressure_total == 2
+    assert {j.id for j in ctrl.drain()} == {0, 1, 4}
+    assert ctrl.drain() == []
+    assert ctrl.consult(0.0, [], np.zeros(0, bool), np.zeros(0)) is None
+
+
+# ---------------------------------------------------------------------------
+# WAN partition injection
+
+
+def test_cluster_link_down_window(configdict):
+    fleet = synth_fleet(1, 1, 1, regions=2)
+    sim = Simulator(configdict, SynergAI(), fleet=fleet, seed=0)
+    cl = sim.cluster
+    cl.link_outages = [LinkFailureEvent("r0", "r1", 10.0, 5.0)]
+    cl._part_memo = (None, frozenset())
+    assert not cl.link_down("r0", "r1", 9.0)
+    assert cl.link_down("r0", "r1", 10.0)
+    assert cl.link_down("r1", "r0", 14.9)      # symmetric
+    assert not cl.link_down("r0", "r1", 15.0)  # half-open window
+    assert not cl.link_down("r0", "r0", 12.0)  # same region: never
+    assert cl.partitioned_pairs(12.0) == \
+        frozenset({frozenset(("r0", "r1"))})
+
+
+def test_partition_blocks_spillover(configdict):
+    """A slot-starved region spills to a foreign idle pool — unless the
+    WAN link to that region is partitioned."""
+    def starved(policy, cl):
+        jobs = [Job(i, ENGINE, 500, 120.0, 0.0) for i in range(4)]
+        for j in jobs:
+            policy.on_arrival(j, cl, 0.0)
+            policy.router.home[j.id] = "r0"
+        for ws in cl.workers.values():
+            if ws.pool.region == "r0":
+                ws.busy_until = 1_000.0
+        return policy.schedule(1.0, jobs, cl)
+
+    fleet = synth_fleet(2, 2, 2, regions=2)
+    pol = HierarchicalSynergAI()
+    sim = Simulator(configdict, pol, fleet=fleet, seed=0)
+    out = starved(pol, sim.cluster)
+    assert out and pol.spills == len(out)      # sanity: spill happens
+
+    pol2 = HierarchicalSynergAI()
+    sim2 = Simulator(configdict, pol2, fleet=fleet, seed=0)
+    sim2.cluster.link_outages = [LinkFailureEvent("r0", "r1", 0.0, 100.0)]
+    sim2.cluster._part_memo = (None, frozenset())
+    out2 = starved(pol2, sim2.cluster)
+    assert out2 == [] and pol2.spills == 0     # partition severs relief
+
+
+def test_partition_end_to_end_with_retries(configdict):
+    """A full mesh partition during a disaggregated multi-region run:
+    cross-region KV pulls are refused at admission, the decode leg
+    re-prefills under the retry budget, and every job still reaches
+    exactly one terminal outcome."""
+    fleet = synth_fleet(3, 6, 9, regions=3, disaggregate=True)
+    jobs = regional_scenario(configdict, "mmpp", n_jobs=150, fleet=fleet,
+                             seed=5, serving="batched")
+    span = jobs[-1].arrival
+    links = [LinkFailureEvent(a, b, 0.0, 2 * span)
+             for a, b in (("r0", "r1"), ("r0", "r2"), ("r1", "r2"))]
+    sim = Simulator(configdict, HierarchicalSynergAI(), fleet=fleet,
+                    serving="batched", link_failures=links, seed=2,
+                    retry_budget=2)
+    res = sim.run(jobs)
+    assert len(res) == 150
+    assert sorted(r.job.id for r in res) == list(range(150))
+    assert {outcome_of(r) for r in res} <= set(OUTCOMES)
+
+
+# ---------------------------------------------------------------------------
+# flapping failure traces
+
+
+def test_synth_failures_flap_splits_pulses(configdict):
+    fleet = synth_fleet(1, 2, 2)
+    solid = synth_failures(fleet, 500.0, mtbf_s=100.0, mttr_s=40.0,
+                           seed=3)
+    flapped = synth_failures(fleet, 500.0, mtbf_s=100.0, mttr_s=40.0,
+                             seed=3, flap=4)
+    assert len(flapped) == 4 * len(solid)
+    by_worker = {}
+    for e in flapped:
+        by_worker.setdefault(e.worker, []).append(e)
+    for e in solid:
+        pulses = [p for p in by_worker[e.worker]
+                  if e.at - 1e-9 <= p.at < e.at + e.duration]
+        assert len(pulses) == 4
+        step = e.duration / 4
+        for i, p in enumerate(sorted(pulses, key=lambda p: p.at)):
+            assert p.at == pytest.approx(e.at + i * step)
+            assert p.duration == pytest.approx(0.5 * step)
+    # flap=None / flap=1 are the seed-identical historical trace
+    assert synth_failures(fleet, 500.0, mtbf_s=100.0, mttr_s=40.0,
+                          seed=3, flap=1) == solid
+
+
+# ---------------------------------------------------------------------------
+# elastic scale-down hysteresis
+
+
+def test_elastic_cooldown_damps_thrash(configdict):
+    fleet = synth_fleet(1, 1, 1)
+    jobs = scenario(configdict, "flash", n_jobs=300, fleet=fleet,
+                    utilization=1.5, seed=3)
+    counts = {}
+    for cool in (0.0, 1e9):
+        sim = Simulator(configdict, SynergAI(), fleet=fleet, seed=1,
+                        elastic_max=4, elastic_threshold=4,
+                        provision_s=5.0, elastic_cooldown_s=cool)
+        res = sim.run(list(jobs))
+        assert len(res) == 300
+        counts[cool] = (sim.elastic_clones_total,
+                        sim.elastic_retires_total)
+    clones0, retires0 = counts[0.0]
+    clones1, retires1 = counts[1e9]
+    assert clones0 > 0                       # the spike provisions
+    # an effectively-infinite quiet window never retires a clone, so
+    # nothing is ever re-provisioned after the first ramp
+    assert retires1 == 0 and clones1 <= clones0
+    assert retires0 >= retires1
+
+
+def test_region_elastic_clones_extend_home_region_only(configdict):
+    """An elastic clone lands in its base pool's region: after growth,
+    each RegionView still holds exactly its own region's columns."""
+    fleet = synth_fleet(2, 2, 2, regions=2)
+    jobs = regional_scenario(configdict, "flash", n_jobs=250, fleet=fleet,
+                             utilization=1.8, seed=3)
+    pol = HierarchicalSynergAI()
+    # infinite cooldown keeps every clone alive to the end of the run,
+    # so the final fleet still carries the provisioned columns
+    sim = Simulator(configdict, pol, fleet=fleet, seed=1, elastic_max=4,
+                    elastic_threshold=4, provision_s=5.0,
+                    elastic_cooldown_s=1e9)
+    res = sim.run(jobs)
+    assert len(res) == 250
+    assert sim.elastic_clones_total > 0
+    assert len(sim.cluster.workers) > len(fleet)
+    pol._ensure(sim.cluster)                 # fold in the final fleet
+    for region, view in pol._views.items():
+        for name in view.arrays.names:
+            assert sim.cluster.workers[name].pool.region == region
+
+
+# ---------------------------------------------------------------------------
+# chaos soak: conservation under everything at once
+
+
+def _chaos_run(configdict, seed, serving):
+    fleet = synth_fleet(2, 4, 6, regions=3)
+    jobs = regional_scenario(configdict, "mmpp", n_jobs=120, fleet=fleet,
+                             utilization=1.4, seed=seed, serving=serving,
+                             patience=6.0)
+    span = jobs[-1].arrival
+    fails = synth_failures(fleet, span, mtbf_s=span / 2, mttr_s=span / 8,
+                           seed=seed, regions=True, flap=2)
+    links = [LinkFailureEvent("r0", "r1", 0.2 * span, 0.4 * span),
+             LinkFailureEvent("r1", "r2", 0.5 * span, 0.3 * span)]
+    ctrl = OverloadController(queue_cap=48)
+    pol = HierarchicalSynergAI(overload=ctrl)
+    sim = Simulator(configdict, pol, fleet=fleet, serving=serving,
+                    failures=fails, link_failures=links, seed=seed,
+                    retry_budget=2, retry_base_s=1.0)
+    return sim, pol, sim.run(jobs), jobs
+
+
+def _assert_conserved(sim, pol, res, jobs, serving):
+    # exactly one terminal outcome per job, nothing lost or duplicated
+    assert sorted(r.job.id for r in res) == sorted(j.id for j in jobs)
+    assert {outcome_of(r) for r in res} <= set(OUTCOMES)
+    # non-served results never bill service
+    for r in res:
+        if r.outcome and r.prefill_worker is None:
+            assert r.worker == "" and r.exec_s == 0.0
+    if serving == "batched":
+        # token conservation: every worker token maps to exactly one
+        # served job (kills and abandons contribute nothing)
+        served = [r for r in res if not r.outcome]
+        want_p = sum(r.job.request.prompt_tokens for r in served)
+        want_d = sum(r.job.request.decode_tokens for r in served)
+        have_p = sum(w.prefill_tokens for w in sim.cluster.workers.values())
+        have_d = sum(w.decoded_tokens for w in sim.cluster.workers.values())
+        assert (have_p, have_d) == (want_p, want_d)
+    # the score caches dropped every terminal job's row
+    for r in res:
+        if r.outcome:
+            for sub in pol._subs.values():
+                assert sub.cache is None or r.job.id not in sub.cache._slot
+
+
+@pytest.mark.parametrize("serving", ["job", "batched"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_soak_conserves_everything(configdict, seed, serving):
+    sim, pol, res, jobs = _chaos_run(configdict, seed, serving)
+    _assert_conserved(sim, pol, res, jobs, serving)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_chaos_soak_property(seed):
+    sim, pol, res, jobs = _chaos_run(_chaos_cd(), seed, "job")
+    _assert_conserved(sim, pol, res, jobs, "job")
+
+
+_CD_CACHE = {}
+
+
+def _chaos_cd():
+    if "cd" not in _CD_CACHE:
+        from repro.core.offline import characterize
+        _CD_CACHE["cd"] = characterize()
+    return _CD_CACHE["cd"]
+
+
+# ---------------------------------------------------------------------------
+# metrics: taxonomy + goodput
+
+
+def test_summarize_outcomes_and_goodput():
+    j = [Job(i, ENGINE, 500, 10.0, 0.0) for i in range(4)]
+    ok = JobResult(j[0], "w", "c", 0.0, 5.0, 0.0, 5.0, 5.0, False, 0.0,
+                   0.0, 0.0)
+    late = JobResult(j[1], "w", "c", 0.0, 20.0, 0.0, 20.0, 20.0, True,
+                     10.0, 0.0, 0.0)
+    shed = JobResult(j[2], "", "", 2.0, 2.0, 2.0, 0.0, 2.0, False, 0.0,
+                     0.0, 0.0, outcome="shed")
+    gone = JobResult(j[3], "", "", 3.0, 3.0, 3.0, 0.0, 3.0, False, 0.0,
+                     0.0, 0.0, outcome="abandoned")
+    s = summarize([ok, late, shed, gone])
+    assert (s["completed"], s["violated"], s["shed"],
+            s["abandoned"], s["failed"]) == (1, 1, 1, 1, 0)
+    assert s["violations"] == 1 and s["jobs"] == 4
+    # latency stats cover the served results only
+    assert s["e2e_max_s"] == 20.0 and s["e2e_avg_s"] == 12.5
+    # goodput: 1 within-QoS completion over the 20 s span
+    assert s["goodput_jps"] == pytest.approx(1 / 20.0)
+    assert [outcome_of(r) for r in (ok, late, shed, gone)] == \
+        ["completed", "violated", "shed", "abandoned"]
+
+
+# ---------------------------------------------------------------------------
+# trace round-trip of the new job fields
+
+
+def test_trace_roundtrip_patience_and_retry_budget(configdict, tmp_path):
+    fleet = synth_fleet(1, 2, 2)
+    jobs = scenario(configdict, "poisson", n_jobs=15, fleet=fleet,
+                    seed=2, patience=1.5)
+    jobs[0].retry_budget = 4
+    jobs[1] = dataclasses.replace(jobs[1], patience=None)
+    path = tmp_path / "trace.jsonl"
+    save_trace(path, jobs)
+    back = load_trace(path)
+    assert [(j.id, j.patience, j.retry_budget) for j in back] == \
+        [(j.id, j.patience, j.retry_budget) for j in jobs]
+
+
+# ---------------------------------------------------------------------------
+# bench smoke (the tier-1 CI leg's schema)
+
+
+def test_bench_overload_smoke(configdict):
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    from scheduler_experiments import bench_overload
+    blob = bench_overload(configdict, smoke=True, emit=lambda *a: None)
+    assert blob["bench"] == "bench_overload" and blob["schema"] == 1
+    variants = {c["variant"] for c in blob["configs"]}
+    assert variants == {"overload-uncontrolled", "overload-controlled"}
+    for c in blob["configs"]:
+        assert {"goodput_jps", "queue_depth_p99", "J", "W", "serving",
+                "regions"} <= set(c)
+        assert sum(c[o] for o in OUTCOMES) == c["J"]
+    assert "overload_headline" not in blob     # smoke never gates

@@ -18,8 +18,11 @@ backlog; hierarchical >= 4x flat at the region-sharded W=2048 fleet,
 ``regions_headline`` from ``bench_regions``; stale-profile violations
 >= 5x online-loop violations under unmodeled drift, ``drift_headline``
 from ``bench_drift_recovery``; energy-or-carbon-aware cut >= 20% at
-<= +10% extra violations, ``energy_headline`` from ``bench_energy``)
-are always enforced when the fresh run contains those configs.  ``speedup_hier_vs_flat`` entries are gated
+<= +10% extra violations, ``energy_headline`` from ``bench_energy``;
+controlled >= 1.5x uncontrolled goodput under 2x sustained overload at
+a bounded p99 queue depth, ``overload_headline`` from
+``bench_overload``) are always enforced when the fresh run contains
+those configs.  ``speedup_hier_vs_flat`` entries are gated
 exactly like ``speedup_vs_uncached`` — both sides measured in-process,
 so the ratio is hardware-independent.  The drift ratio is not even a
 timing: fixed seeds and a fixed degradation timeline make the
@@ -46,11 +49,13 @@ REGIONS_FLOOR = 4.0         # hierarchical vs flat at W=2048, k>=16
 DRIFT_FLOOR = 5.0           # stale vs online violations under drift
 ENERGY_FLOOR = 0.20         # aware-vs-blind energy *or* carbon cut
 ENERGY_VIOL_CEIL = 0.10     # allowed extra QoS violations, relative
+OVERLOAD_FLOOR = 1.5        # controlled vs uncontrolled goodput
 
 # the hardware-independent per-config ratios the gate watches
 _SPEEDUPS = ("speedup_vs_uncached", "speedup_hier_vs_flat",
              "violation_ratio_stale_vs_online",
-             "energy_reduction_vs_blind", "carbon_reduction_vs_blind")
+             "energy_reduction_vs_blind", "carbon_reduction_vs_blind",
+             "goodput_ratio_controlled_vs_uncontrolled")
 
 
 def _index(blob):
@@ -179,6 +184,30 @@ def main(argv=None):
             failures.append(
                 f"energy_headline violation overhead {over:+.3f} above "
                 f"the +{ENERGY_VIOL_CEIL:.2f} ceiling")
+    ohead = fresh_blob.get("overload_headline")
+    if ohead:
+        # deterministic like the drift ratio: fixed seeds and a fixed
+        # fault timeline — goodput counts, not wall-clock.  acceptance
+        # is controlled >= 1.5x uncontrolled goodput at a p99 queue
+        # depth under the recorded bound.
+        ratio = ohead.get("goodput_ratio_controlled_vs_uncontrolled", 0.0)
+        p99 = ohead.get("queue_depth_p99_controlled", float("inf"))
+        bound = ohead.get("queue_depth_bound", 0.0)
+        ok = ratio >= OVERLOAD_FLOOR and p99 <= bound
+        tag = "ok  " if ok else "FAIL"
+        print(f"{tag} overload_headline J={ohead.get('J')} "
+              f"W={ohead.get('W')}: controlled {ratio:.2f}x "
+              f"uncontrolled goodput (floor {OVERLOAD_FLOOR:.1f}x), "
+              f"depth p99 {p99:.0f} (bound {bound:.0f})")
+        if ratio < OVERLOAD_FLOOR:
+            failures.append(
+                f"overload_headline controlled-vs-uncontrolled goodput "
+                f"{ratio:.2f}x below the {OVERLOAD_FLOOR:.1f}x "
+                f"acceptance floor")
+        if p99 > bound:
+            failures.append(
+                f"overload_headline controlled p99 queue depth "
+                f"{p99:.0f} above the {bound:.0f} bound")
     if failures:
         print("\nperf regression gate FAILED:")
         for f_ in failures:
